@@ -1,0 +1,88 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layout as L
+from repro.core.bitio import bits_for
+from repro.gbdt.forest import Forest, _traverse_one_tree
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+def save_json(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+
+
+def cumulative_metrics(forest: Forest, bins, y, loss):
+    """Per-round test metric: exploit additivity — traverse each tree once
+    and evaluate the metric on every prefix of the ensemble."""
+    C = forest.n_ensembles
+    n = bins.shape[0]
+    bins = bins.astype(jnp.int32)
+
+    def body(acc, tree):
+        t_idx, feat, thr, split, lref = tree
+        ref = _traverse_one_tree(feat, thr, split, lref, bins)
+        contrib = forest.leaf_values[ref]
+        active = (t_idx < forest.n_trees).astype(contrib.dtype)
+        cls = t_idx % C
+        acc = acc + contrib[:, None] * active * jax.nn.one_hot(cls, C, dtype=contrib.dtype)
+        return acc, loss.metric(y, acc)
+
+    acc0 = jnp.zeros((n, C), jnp.float32) + forest.base_score[None, :]
+    trees = (
+        jnp.arange(forest.tree_capacity, dtype=jnp.int32),
+        forest.feature, forest.thr_bin, forest.is_split, forest.leaf_ref,
+    )
+    _, metrics = jax.lax.scan(body, acc0, trees)
+    # metric after round r = after tree (r+1)*C - 1
+    return np.asarray(metrics)[C - 1 :: C]
+
+
+def per_round_bytes(history, forest: Forest):
+    """(rounds,) arrays of bytes for every layout, from the training history."""
+    n_splits = np.asarray(history["n_splits"], dtype=np.int64)
+    n_rounds = len(n_splits)
+    C = forest.n_ensembles
+    trees = (np.arange(n_rounds) + 1) * C
+    toad = np.asarray(history["bytes"])
+    pointer = (2 * n_splits + trees) * 128 / 8.0
+    quant = (2 * n_splits + trees) * 64 / 8.0
+    # array layout: per-tree complete array at its own depth
+    split = np.asarray(forest.is_split)
+    I = split.shape[1]
+    level = np.floor(np.log2(np.arange(I) + 1)).astype(int)
+    depth_t = np.where(split, level[None, :] + 1, 0).max(axis=1)
+    slots = 2 ** (depth_t + 1) - 1
+    arr = np.cumsum(slots)[trees - 1] * 64 / 8.0
+    return {"toad": toad, "pointer_f32": pointer, "pointer_f16": quant, "array_f32": arr}
+
+
+def best_under_limit(bytes_arr, metric_arr, limit, accepted):
+    """Best metric among prefixes within the byte limit (paper Fig.4 rule)."""
+    ok = (bytes_arr <= limit) & accepted
+    if not ok.any():
+        return None
+    return float(np.nanmax(metric_arr[ok]))
+
+
+def timer(fn, *args, reps=5, warmup=2):
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+    return (time.perf_counter() - t0) / reps

@@ -1,0 +1,135 @@
+"""Paper Fig. 4: best quality achievable at each memory limit, ToaD vs
+baselines.  One training run per (method, depth); the per-round history +
+prefix-metric trick evaluates every ensemble size at once."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import best_under_limit, cumulative_metrics, per_round_bytes, save_json
+from repro.data.pipeline import split_dataset
+from repro.data.synth import load
+from repro.gbdt import GBDTConfig, apply_bins, make_loss, train_jit
+from repro.gbdt.baselines import ccp_prune, cegb_config, quantize_forest
+
+LIMITS = [256, 512, 1024, 2048, 4096, 8192, 16384, 32768]  # bytes
+PENALTIES = [(1.0, 0.25), (4.0, 1.0), (16.0, 4.0), (64.0, 16.0)]
+DEPTHS = [2, 3]
+
+
+def run(datasets=("covtype_binary", "california_housing", "wine_quality", "kr_vs_kp"),
+        n_rounds=192, seeds=(1, 2, 3), n_cap=12000, verbose=True):
+    rows = []
+    for name in datasets:
+        for seed in seeds:
+            ds = load(name, seed=seed, n=min(n_cap, 40000) if "covtype" in name else None)
+            sp = split_dataset(ds, seed=seed, n_bins=64)
+            edges = jnp.asarray(sp.edges)
+            btr = apply_bins(jnp.asarray(sp.x_train), edges)
+            bte = apply_bins(jnp.asarray(sp.x_test), edges)
+            ytr, yte = jnp.asarray(sp.y_train), jnp.asarray(sp.y_test)
+            loss = make_loss(ds.task, ds.n_classes)
+
+            curves = {}  # method -> list[(bytes, metric)] candidate points
+
+            def add_curve(method, bytes_arr, metric_arr, accepted):
+                curves.setdefault(method, []).append((bytes_arr, metric_arr, accepted))
+
+            for depth in DEPTHS:
+                base = GBDTConfig(task=ds.task, n_classes=ds.n_classes,
+                                  n_rounds=n_rounds, max_depth=depth, learning_rate=0.15)
+                # vanilla (= LightGBM-like); also ToaD layout without penalties
+                f0, h0, a0 = train_jit(base, btr, ytr, edges)
+                met0 = cumulative_metrics(f0, bte, yte, loss)
+                acc0 = np.asarray(h0["accepted"])
+                pb = per_round_bytes(h0, f0)
+                add_curve("toad_nopen", pb["toad"], met0, acc0)
+                add_curve("lgbm_f32", pb["pointer_f32"], met0, acc0)
+                add_curve("lgbm_array", pb["array_f32"], met0, acc0)
+                fq = quantize_forest(f0)
+                metq = cumulative_metrics(fq, bte, yte, loss)
+                add_curve("lgbm_f16", pb["pointer_f16"], metq, acc0)
+
+                # ToaD with penalties
+                for pf, pt in PENALTIES:
+                    cfg = dataclasses.replace(
+                        base, toad_penalty_feature=pf, toad_penalty_threshold=pt
+                    )
+                    f1, h1, _ = train_jit(cfg, btr, ytr, edges)
+                    add_curve("toad_penalized", np.asarray(h1["bytes"]),
+                              cumulative_metrics(f1, bte, yte, loss),
+                              np.asarray(h1["accepted"]))
+
+                # CEGB
+                for tr in (1.0, 8.0):
+                    fc, hc, _ = train_jit(cegb_config(base, tr), btr, ytr, edges)
+                    pbc = per_round_bytes(hc, fc)
+                    add_curve("cegb", pbc["pointer_f32"],
+                              cumulative_metrics(fc, bte, yte, loss),
+                              np.asarray(hc["accepted"]))
+
+                # CCP on the vanilla model
+                for alpha in (0.5, 2.0, 8.0):
+                    fp = ccp_prune(f0, np.asarray(a0["node_gain"]),
+                                   np.asarray(a0["leaf_cnt"]), alpha)
+                    K = int(fp.n_trees)
+                    sp_l = int(np.asarray(fp.is_split)[:K].sum())
+                    b = np.asarray([(2 * sp_l + K) * 128 / 8.0])
+                    m = np.asarray([float(loss.metric(yte, __import__(
+                        "repro.gbdt", fromlist=["predict_binned"]
+                    ).predict_binned(fp, bte)))])
+                    add_curve("ccp", b, m, np.asarray([True]))
+
+            for limit in LIMITS:
+                row = {"dataset": name, "seed": seed, "limit_bytes": limit}
+                for method, pieces in curves.items():
+                    best = None
+                    for b, m, acc in pieces:
+                        v = best_under_limit(np.asarray(b), np.asarray(m), limit,
+                                             np.asarray(acc, bool))
+                        if v is not None and (best is None or v > best):
+                            best = v
+                    row[method] = best
+                rows.append(row)
+                if verbose:
+                    print(row, flush=True)
+    save_json("fig4_quality_memory.json", rows)
+    return rows
+
+
+def summarize(rows):
+    """Compression-ratio headline: memory LightGBM needs to match ToaD."""
+    out = []
+    methods = ["toad_penalized", "toad_nopen", "lgbm_f32", "lgbm_f16", "lgbm_array", "cegb", "ccp"]
+    datasets = sorted({r["dataset"] for r in rows})
+    for dsname in datasets:
+        sub = [r for r in rows if r["dataset"] == dsname]
+        for limit in LIMITS:
+            at = [r for r in sub if r["limit_bytes"] == limit]
+            if not at:
+                continue
+            mean = {m: np.mean([r[m] for r in at if r.get(m) is not None] or [np.nan])
+                    for m in methods}
+            # smallest lgbm_f32 limit whose quality >= toad at this limit
+            t = mean["toad_penalized"]
+            ratio = None
+            if t is not None and not np.isnan(t):
+                for l2 in LIMITS:
+                    at2 = [r for r in sub if r["limit_bytes"] == l2]
+                    v = np.mean([r["lgbm_f32"] for r in at2 if r.get("lgbm_f32") is not None]
+                                or [np.nan])
+                    if not np.isnan(v) and v >= t - 1e-6:
+                        ratio = l2 / limit
+                        break
+            out.append({"dataset": dsname, "limit": limit, **mean,
+                        "lgbm_f32_memory_multiple": ratio})
+    return out
+
+
+if __name__ == "__main__":
+    rows = run()
+    for s in summarize(rows):
+        print(s)

@@ -1,0 +1,24 @@
+"""Paper Fig. 5: model quality across the (ι × ξ) grid at a FIXED memory
+limit (the user-facing `toad_forestsize` workflow: pick a microcontroller,
+get the best penalty setting for it)."""
+
+from __future__ import annotations
+
+from benchmarks.common import save_json
+from benchmarks.fig7_multivariate import GRID, run
+
+
+def run_fig5(limit_bytes: float = 1024.0, dataset="california_housing", verbose=True):
+    rows = run(datasets=(dataset,), forestsize=limit_bytes, n_cap=8000, verbose=False)
+    best = max(rows, key=lambda r: r["metric"])
+    if verbose:
+        for r in rows:
+            print(r)
+        print("best:", best)
+    save_json("fig5_penalty_grid.json", {"limit_bytes": limit_bytes, "rows": rows,
+                                         "best": best})
+    return rows, best
+
+
+if __name__ == "__main__":
+    run_fig5()

@@ -1,0 +1,224 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per the assignment's definitions (v5e constants):
+
+    compute term    = HLO_FLOPs / (chips × 197e12)        [s/step]
+    memory term     = HLO_bytes / (chips × 819e9)         [s/step]
+    collective term = collective_bytes / (chips × 50e9)   [s/step]
+
+The dry-run JSONs carry *per-device* loop-corrected numbers (cost_analysis
+of the post-SPMD per-device program — launch/dryrun.py), so each term is
+per_device_quantity / per_chip_rate.
+
+Two columns need care on a CPU-compiled artifact:
+
+* ``t_memory`` (spec formula) uses XLA's "bytes accessed", which on the CPU
+  backend counts every operand of every *unfused* op — a TPU upper bound.
+  ``t_memory_floor`` is the documented analytic lower bound (weight passes
+  + optimizer + remat activations + caches), i.e. what a well-fused TPU
+  program must still move.  MFU is reported against both.
+* MODEL_FLOPS uses the standard conventions: 6·N_active·tokens for a train
+  step, 2·N_active·tokens for forward-only (prefill/decode).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+SHAPE_META = {
+    "train_4k": dict(seq=4096, batch=256),
+    "prefill_32k": dict(seq=32768, batch=32),
+    "decode_32k": dict(seq=32768, batch=128),
+    "long_500k": dict(seq=524288, batch=1),
+}
+
+
+def load_cells():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "dryrun_*_single.json"))):
+        try:
+            cells.append(json.load(open(path)))
+        except Exception:
+            continue
+    return cells
+
+
+def memory_floor_bytes(cell: dict) -> float:
+    """Analytic per-device HBM floor (documented formulas).
+
+    train:   3 weight passes (fwd/bwd/remat-fwd) of the per-chip weight
+             working set (gathered bf16, N/model_axis for dense paths; MoE
+             experts stay expert-sharded) + optimizer state read/write
+             (fp32 p + m + v on the N/chips FSDP shard) + remat'd layer
+             activations (save + reload).
+    prefill: 1 weight pass + cache write.
+    decode:  1 weight pass of ACTIVE params + full cache read (the decode
+             wall) + cache write of one token (negligible).
+    """
+    kind = cell.get("kind")
+    chips = cell.get("n_chips", 256)
+    model_axis = 16
+    data_axis = chips // model_axis
+    N = cell.get("params_total", 0)
+    Na = cell.get("params_active", N)
+    meta = SHAPE_META.get(cell.get("shape"), None)
+
+    if kind == "gbdt_train":
+        # bins stream once per level per round + histogram write/reduce
+        try:
+            rows = int(cell["shape"].split("rows")[1].split("_")[0])
+            d = int(cell["shape"].split("_d")[1].split("_")[0])
+            depth = int(cell["shape"].split("_depth")[1].split("_")[0])
+            rounds = int(cell["shape"].split("_r")[1].split("_")[0])
+        except Exception:
+            return 0.0
+        return rounds * depth * (rows / chips) * d * 4.0
+
+    if meta is None:
+        return 0.0
+    B, S = meta["batch"], meta["seq"]
+
+    if kind == "train":
+        tokens_local = B * S / data_axis
+        weights = 3 * 2.0 * (N / model_axis)
+        opt = 24.0 * (N / chips)
+        # layer-boundary activations (save+reload), d_model from flops ratio
+        acts = 2 * 2.0 * tokens_local * _d_model(cell)
+        acts *= _n_layers(cell)
+        return weights + opt + acts
+    if kind == "prefill":
+        tokens_local = B * S / data_axis
+        weights = 2.0 * (N / model_axis)
+        cache = 2 * 2.0 * tokens_local * 1024  # kv per token approx (KVp*dh*2B)
+        return weights + cache
+    # decode
+    weights = 2.0 * (Na / model_axis)
+    cache = cell.get("memory", {}).get("argument_size_in_bytes", 0) * 0.8
+    return weights + cache
+
+
+def _d_model(cell):
+    d_by_arch = {
+        "qwen3-4b": 2560, "llama3.2-3b": 3072, "qwen1.5-32b": 5120,
+        "stablelm-12b": 5120, "olmoe-1b-7b": 2048,
+        "llama4-maverick-400b-a17b": 5120, "rwkv6-1.6b": 2048,
+        "whisper-small": 768, "recurrentgemma-9b": 4096, "llava-next-34b": 7168,
+    }
+    return d_by_arch.get(cell.get("arch"), 4096)
+
+
+def _n_layers(cell):
+    l_by_arch = {
+        "qwen3-4b": 36, "llama3.2-3b": 28, "qwen1.5-32b": 64, "stablelm-12b": 40,
+        "olmoe-1b-7b": 16, "llama4-maverick-400b-a17b": 48, "rwkv6-1.6b": 24,
+        "whisper-small": 24, "recurrentgemma-9b": 38, "llava-next-34b": 60,
+    }
+    return l_by_arch.get(cell.get("arch"), 32)
+
+
+def analyze(cell: dict) -> dict | None:
+    if cell.get("status") == "SKIP":
+        return {"arch": cell["arch"], "shape": cell["shape"], "status": "SKIP",
+                "reason": cell.get("reason", "")}
+    if cell.get("status") != "OK":
+        return {"arch": cell.get("arch"), "shape": cell.get("shape"), "status": "FAIL",
+                "reason": str(cell.get("error", ""))[:120]}
+    cost = cell.get("cost_corrected_per_device") or {}
+    coll = cell.get("collectives_corrected_per_device") or {}
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes", 0.0)
+    coll_dev = coll.get("total", 0.0)
+    n_chips = cell.get("n_chips", 256)
+    kind = cell.get("kind")
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    floor = memory_floor_bytes(cell) / HBM_BW
+
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_hlo = max(terms.values())
+    step_floor = max(t_compute, floor, t_coll)
+
+    factor = 6.0 if kind in ("train", "gbdt_train") else 2.0
+    model_flops = factor * cell.get("params_active", 0) * cell.get("tokens_per_step", 0)
+    hlo_flops_global = flops_dev * n_chips
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+    mfu_hlo = (model_flops / (n_chips * PEAK_FLOPS * step_hlo)) if step_hlo > 0 else 0.0
+    mfu_floor = (model_flops / (n_chips * PEAK_FLOPS * step_floor)) if step_floor > 0 else 0.0
+
+    if kind == "gbdt_train":
+        # flops-MFU is meaningless for histogram workloads: report the
+        # bandwidth utilization of the dominant (memory) term instead
+        useful = float("nan")
+        mfu_hlo = t_memory / step_hlo if step_hlo else 0.0
+        mfu_floor = min(1.0, floor / step_floor) if step_floor else 0.0
+
+    mem = cell.get("memory", {})
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "status": "OK", "kind": kind,
+        "t_compute_s": t_compute, "t_memory_s": t_memory, "t_collective_s": t_coll,
+        "t_memory_floor_s": floor,
+        "dominant": dominant,
+        "step_time_hlo_s": step_hlo, "step_time_floor_s": step_floor,
+        "model_flops": model_flops, "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": useful,
+        "mfu_hlo": mfu_hlo, "mfu_floor": mfu_floor,
+        "resident_bytes_per_chip": mem.get("argument_size_in_bytes", 0),
+        "temp_bytes_per_chip_cpu_upper_bound": mem.get("temp_size_in_bytes"),
+        "collectives_by_op_GB": {
+            k: round(v / 1e9, 3)
+            for k, v in (cell.get("collectives_corrected_per_device") or {}).items()
+        },
+    }
+
+
+def table(rows):
+    hdr = ["arch", "shape", "t_compute", "t_mem(hlo)", "t_mem(floor)", "t_coll",
+           "dominant", "MFU(hlo)", "MFU(floor)", "useful"]
+    lines = ["| " + " | ".join(hdr) + " |", "|" + "---|" * len(hdr)]
+    for r in rows:
+        if r is None:
+            continue
+        if r["status"] != "OK":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — |"
+                         f" {r['status']}: {r.get('reason','')[:48]} | — | — | — |")
+            continue
+        u = r["useful_flops_ratio"]
+        lines.append(
+            "| {a} | {s} | {c:.3f}s | {m:.3f}s | {f:.3f}s | {x:.3f}s | {dom} |"
+            " {m1:.1%} | {m2:.1%} | {u} |".format(
+                a=r["arch"], s=r["shape"], c=r["t_compute_s"], m=r["t_memory_s"],
+                f=r["t_memory_floor_s"], x=r["t_collective_s"], dom=r["dominant"],
+                m1=r["mfu_hlo"], m2=r["mfu_floor"],
+                u=("—" if u != u else f"{u:.1%}"),
+            )
+        )
+    return "\n".join(lines)
+
+
+def main(verbose=True):
+    rows = [analyze(c) for c in load_cells()]
+    rows = [r for r in rows if r is not None]
+    out = table(rows)
+    if verbose:
+        print(out)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "roofline_table.md"), "w") as f:
+        f.write(out + "\n")
+    with open(os.path.join(RESULTS_DIR, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=2, default=float)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: train a ToaD-compressed boosted ensemble and inspect the
+quality/memory trade-off.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+
+from repro.core import compression_summary, encode, reuse_factor
+from repro.data.pipeline import split_dataset
+from repro.data.synth import load
+from repro.gbdt import GBDTConfig, apply_bins, make_loss, predict_binned, train_jit
+
+
+def main():
+    ds = load("california_housing", seed=1, n=8000)
+    sp = split_dataset(ds, seed=1, n_bins=64)
+    edges = jnp.asarray(sp.edges)
+    bins_tr = apply_bins(jnp.asarray(sp.x_train), edges)
+    bins_te = apply_bins(jnp.asarray(sp.x_test), edges)
+    loss = make_loss(ds.task)
+
+    for label, (pf, pt) in {
+        "vanilla GBDT          ": (0.0, 0.0),
+        "ToaD  ι=4, ξ=1        ": (4.0, 1.0),
+        "ToaD  ι=16, ξ=4       ": (16.0, 4.0),
+    }.items():
+        cfg = GBDTConfig(task=ds.task, n_rounds=64, max_depth=3, learning_rate=0.15,
+                         toad_penalty_feature=pf, toad_penalty_threshold=pt)
+        forest, hist, aux = train_jit(cfg, bins_tr, jnp.asarray(sp.y_train), edges)
+        r2 = float(loss.metric(jnp.asarray(sp.y_test), predict_binned(forest, bins_te)))
+        s = compression_summary(forest)
+        print(f"{label} R2={r2:.3f}  toad={s['toad_bytes']:7.0f}B "
+              f"(x{s['compression_vs_f32']:.1f} vs fp32 pointers) "
+              f"features={int(hist['n_fu'][-1])} thresholds={int(hist['n_thr'][-1])} "
+              f"ReF={reuse_factor(forest):.2f}")
+
+    # serialize the smallest model
+    print(f"\nencoded artifact: {encode(forest).n_bytes:.0f} bytes "
+          f"— fits an Arduino EEPROM")
+
+
+if __name__ == "__main__":
+    main()

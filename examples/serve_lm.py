@@ -1,0 +1,25 @@
+"""Serve a (reduced) assigned architecture with batched requests — the
+prefill + flash-decode path that the decode_32k/long_500k dry-run cells
+lower at production scale.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-1.6b
+"""
+
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    args = ap.parse_args()
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
+         "--reduced", "--batch", "4", "--prompt-len", "32", "--decode-steps", "16"],
+        check=True,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Architecture registry: exact assigned configs + reduced smoke variants.
+
+``get_config(name)`` returns the full production ModelConfig;
+``get_reduced(name)`` returns a same-family miniature for CPU smoke tests.
+``toad_gbdt`` is the paper's own workload (GBDT training) and is handled by
+the GBDT engine rather than the LM stack.
+"""
+
+from __future__ import annotations
+
+from repro.configs import (
+    llama3_2_3b,
+    llama4_maverick_400b_a17b,
+    llava_next_34b,
+    olmoe_1b_7b,
+    qwen1_5_32b,
+    qwen3_4b,
+    recurrentgemma_9b,
+    rwkv6_1_6b,
+    stablelm_12b,
+    toad_gbdt,
+    whisper_small,
+)
+
+ARCHS = {
+    "qwen3-4b": qwen3_4b,
+    "llama3.2-3b": llama3_2_3b,
+    "qwen1.5-32b": qwen1_5_32b,
+    "stablelm-12b": stablelm_12b,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "llama4-maverick-400b-a17b": llama4_maverick_400b_a17b,
+    "rwkv6-1.6b": rwkv6_1_6b,
+    "whisper-small": whisper_small,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "llava-next-34b": llava_next_34b,
+}
+
+GBDT_CONFIGS = {"toad_gbdt": toad_gbdt}
+
+
+def get_config(name: str):
+    return ARCHS[name].config()
+
+
+def get_reduced(name: str):
+    return ARCHS[name].reduced()
+
+
+def list_archs():
+    return list(ARCHS)

@@ -1,0 +1,40 @@
+"""The paper's own workload: distributed ToaD GBDT training.
+
+Used by the dry-run/roofline harness as the paper-representative cell: a
+large synthetic binned dataset sharded over the full mesh, one histogram
+all-reduce per tree level.  Shapes chosen so the per-level histogram
+(nodes × d × bins × 3) and per-round work are production-scale.
+"""
+
+import dataclasses
+
+from repro.gbdt.trainer import GBDTConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ToadWorkload:
+    rows: int = 1 << 24          # 16.7M samples, sharded over data axis
+    n_features: int = 256
+    n_bins: int = 256
+    gbdt: GBDTConfig = GBDTConfig(
+        task="binary",
+        n_rounds=8,              # one scan body compiles; rounds scale linearly
+        max_depth=8,
+        learning_rate=0.1,
+        toad_penalty_feature=8.0,
+        toad_penalty_threshold=2.0,
+        leaf_capacity=8192,
+    )
+
+
+def config() -> ToadWorkload:
+    return ToadWorkload()
+
+
+def reduced() -> ToadWorkload:
+    return ToadWorkload(
+        rows=4096,
+        n_features=16,
+        n_bins=32,
+        gbdt=dataclasses.replace(config().gbdt, n_rounds=4, max_depth=3),
+    )

@@ -1,0 +1,37 @@
+"""The paper's primary contribution: ToaD compression for boosted trees.
+
+- ``bitio``: bit-level stream I/O.
+- ``layout``: the five-component bit-packed memory layout (encode/decode).
+- ``memory``: exact stream-size accounting (host + in-jit) and baselines.
+"""
+
+from repro.core.bitio import BitReader, BitWriter, bits_for
+from repro.core.layout import DecodedModel, EncodedModel, PackedEnsemble, decode, encode, to_packed
+from repro.core.memory import (
+    array_bits,
+    compression_summary,
+    pointer_bits,
+    quantized_pointer_bits,
+    reuse_factor,
+    toad_bits,
+    toad_bits_host,
+)
+
+__all__ = [
+    "BitReader",
+    "BitWriter",
+    "bits_for",
+    "DecodedModel",
+    "EncodedModel",
+    "PackedEnsemble",
+    "decode",
+    "encode",
+    "to_packed",
+    "array_bits",
+    "compression_summary",
+    "pointer_bits",
+    "quantized_pointer_bits",
+    "reuse_factor",
+    "toad_bits",
+    "toad_bits_host",
+]

@@ -1,0 +1,88 @@
+"""Bit-level I/O used by the ToaD memory layout (paper Sec. 3.2.1).
+
+Pure numpy, MSB-first within the stream.  The writer produces a ``uint8``
+byte array whose length (in bits) is exactly the number of bits written —
+the paper's memory accounting is derived from this stream, so there is no
+hidden padding other than the final partial byte.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class BitWriter:
+    def __init__(self) -> None:
+        self._bits: list[int] = []
+
+    @property
+    def n_bits(self) -> int:
+        return len(self._bits)
+
+    def write(self, value: int, width: int) -> None:
+        """Write ``value`` as ``width`` bits, MSB first."""
+        if width < 0:
+            raise ValueError("width must be >= 0")
+        value = int(value)
+        if value < 0 or (width < 64 and value >= (1 << width)):
+            raise ValueError(f"value {value} does not fit in {width} bits")
+        for i in range(width - 1, -1, -1):
+            self._bits.append((value >> i) & 1)
+
+    def write_f32(self, value: float) -> None:
+        self.write(int(np.float32(value).view(np.uint32)), 32)
+
+    def write_f16(self, value: float) -> None:
+        self.write(int(np.float16(value).view(np.uint16)), 16)
+
+    def getvalue(self) -> np.ndarray:
+        """The stream as a uint8 array (final byte zero-padded)."""
+        n = len(self._bits)
+        out = np.zeros((n + 7) // 8, dtype=np.uint8)
+        for i, b in enumerate(self._bits):
+            if b:
+                out[i // 8] |= 1 << (7 - (i % 8))
+        return out
+
+
+class BitReader:
+    def __init__(self, data: np.ndarray, n_bits: int | None = None) -> None:
+        self._data = np.asarray(data, dtype=np.uint8)
+        self._pos = 0
+        self._n_bits = 8 * len(self._data) if n_bits is None else n_bits
+
+    @property
+    def pos(self) -> int:
+        return self._pos
+
+    @property
+    def remaining(self) -> int:
+        return self._n_bits - self._pos
+
+    def read(self, width: int) -> int:
+        if width > self.remaining:
+            raise EOFError(f"requested {width} bits, {self.remaining} remain")
+        value = 0
+        for _ in range(width):
+            byte = self._data[self._pos // 8]
+            bit = (int(byte) >> (7 - (self._pos % 8))) & 1
+            value = (value << 1) | bit
+            self._pos += 1
+        return value
+
+    def read_f32(self) -> float:
+        return float(np.uint32(self.read(32)).view(np.float32))
+
+    def read_f16(self) -> float:
+        return float(np.uint16(self.read(16)).view(np.float16))
+
+
+def bits_for(n: int) -> int:
+    """⌈log2(n)⌉ with the convention bits_for(0) = bits_for(1) = 1.
+
+    The paper indexes ``n`` distinct items; one item still needs a 1-bit
+    field so the decoder has a well-defined stride.
+    """
+    if n <= 1:
+        return 1
+    return int(np.ceil(np.log2(n)))

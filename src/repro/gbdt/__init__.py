@@ -1,0 +1,18 @@
+from repro.gbdt.binning import apply_bins, fit_bins
+from repro.gbdt.forest import Forest, empty_forest, predict_binned, predict_raw
+from repro.gbdt.losses import make_loss
+from repro.gbdt.trainer import GBDTConfig, train, train_grid, train_jit
+
+__all__ = [
+    "apply_bins",
+    "fit_bins",
+    "Forest",
+    "empty_forest",
+    "predict_binned",
+    "predict_raw",
+    "make_loss",
+    "GBDTConfig",
+    "train",
+    "train_grid",
+    "train_jit",
+]

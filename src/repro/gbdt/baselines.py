@@ -1,0 +1,301 @@
+"""Baselines from the paper's Sec. 4.2 / App. D comparison.
+
+* vanilla LightGBM-like GBDT  = trainer with penalties off, pointer layout.
+* quantized LightGBM          = same model, fp16 thresholds/leaf values,
+                                64 bits/node accounting.
+* array-based LightGBM        = same model, pointer-less complete arrays.
+* CEGB (Peter et al. 2017)    = feature-acquisition cost (coupled) + per-split
+                                evaluation cost; pointer layout.
+* CCP (Breiman et al. 1984)   = minimal cost-complexity post-pruning using the
+                                split gains recorded during training.
+* RF (+ margin&diversity pruning, Guo et al. 2018) for App. D.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.gbdt.forest import Forest, predict_binned
+from repro.gbdt.trainer import GBDTConfig, _grow_tree, train_jit
+
+
+# --------------------------------------------------------------------------
+# Quantized LightGBM (fp16 thresholds + leaf values)
+# --------------------------------------------------------------------------
+
+
+def quantize_forest(forest: Forest) -> Forest:
+    """fp16-round thresholds and leaf values (the paper's 'quantized' baseline)."""
+    return dataclasses.replace(
+        forest,
+        edges=forest.edges.astype(jnp.float16).astype(jnp.float32),
+        leaf_values=forest.leaf_values.astype(jnp.float16).astype(jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------------
+# CEGB
+# --------------------------------------------------------------------------
+
+
+def cegb_config(base: GBDTConfig, tradeoff: float, penalty_split: float = 0.25) -> GBDTConfig:
+    """CEGB as configured against ToaD in the paper: coupled feature cost
+    (paid once per new feature in the ensemble) + per-split evaluation cost
+    proportional to the fraction of samples traversing the node."""
+    return dataclasses.replace(
+        base,
+        toad_penalty_feature=tradeoff,
+        toad_penalty_threshold=0.0,
+        cegb_penalty_split=tradeoff * penalty_split,
+    )
+
+
+# --------------------------------------------------------------------------
+# CCP: minimal cost-complexity pruning from recorded gains
+# --------------------------------------------------------------------------
+
+
+def ccp_prune(forest: Forest, node_gain: np.ndarray, leaf_cnt: np.ndarray, alpha: float) -> Forest:
+    """Weakest-link pruning: collapse any subtree whose mean gain per split
+    is <= alpha.  Host-side; leaf values of a collapsed subtree are merged
+    (count-weighted) and appended to the global table.
+
+    Args:
+      forest: trained ensemble.
+      node_gain: (T, I) recorded split gains (aux['node_gain']).
+      leaf_cnt: (T, L) training sample counts per leaf (aux['leaf_cnt']).
+      alpha: complexity parameter.
+    """
+    K = int(forest.n_trees)
+    feature = np.array(forest.feature)
+    thr = np.array(forest.thr_bin)
+    split = np.array(forest.is_split)
+    lref = np.array(forest.leaf_ref)
+    gains = np.asarray(node_gain)
+    cnts = np.asarray(leaf_cnt)
+    table = list(np.asarray(forest.leaf_values))
+    n_leaf = int(forest.n_leaf_values)
+    T, I = feature.shape
+    L = lref.shape[1]
+    D = int(np.log2(L))
+
+    def leaf_stats(t, node):
+        """(weighted value sum, count) over reachable leaves under ``node``."""
+        if node >= I:  # leaf slot
+            j = node - I
+            v = table[lref[t, j]]
+            c = cnts[t, j]
+            return v * c, c
+        if not split[t, node]:
+            # unsplit internal: everything routes left
+            return leaf_stats(t, 2 * node + 1)
+        lv, lc = leaf_stats(t, 2 * node + 1)
+        rv, rc = leaf_stats(t, 2 * node + 2)
+        return lv + rv, lc + rc
+
+    def prune(t, node):
+        """Returns (subtree gain sum, subtree split count) after pruning."""
+        if node >= I or not split[t, node]:
+            if node < I:
+                # keep following the live left chain
+                return prune(t, 2 * node + 1) if 2 * node + 1 < 2 * I + 1 else (0.0, 0)
+            return 0.0, 0
+        gl, nl = prune(t, 2 * node + 1)
+        gr, nr = prune(t, 2 * node + 2)
+        g = gains[t, node] + gl + gr
+        ns = 1 + nl + nr
+        if g / ns <= alpha:
+            # collapse: merged value goes to the leftmost reachable leaf slot
+            vsum, csum = leaf_stats(t, node)
+            merged = vsum / max(csum, 1e-9)
+            # clear the subtree
+            stack = [node]
+            while stack:
+                m = stack.pop()
+                if m < I:
+                    if split[t, m]:
+                        stack.extend([2 * m + 1, 2 * m + 2])
+                    split[t, m] = False
+            # leftmost leaf under node
+            leftmost = node
+            while leftmost < I:
+                leftmost = 2 * leftmost + 1
+            nonlocal_table_append = merged
+            table.append(np.float32(nonlocal_table_append))
+            lref[t, leftmost - I] = len(table) - 1
+            return 0.0, 0
+        return g, ns
+
+    for t in range(K):
+        prune(t, 0)
+
+    new_table = np.asarray(table, dtype=np.float32)
+    return dataclasses.replace(
+        forest,
+        feature=jnp.asarray(feature),
+        thr_bin=jnp.asarray(thr),
+        is_split=jnp.asarray(split),
+        leaf_ref=jnp.asarray(lref),
+        leaf_values=jnp.asarray(new_table),
+        n_leaf_values=jnp.asarray(len(table), jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------------
+# Random forest (App. D)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RFConfig:
+    task: str = "binary"
+    n_classes: int = 0
+    n_trees: int = 64
+    max_depth: int = 4
+    feature_fraction: float = 0.7
+    reg_lambda: float = 1e-3
+    min_child_samples: int = 1
+
+    @property
+    def n_ensembles(self) -> int:
+        return self.n_classes if self.task == "multiclass" else 1
+
+
+def train_rf(cfg: RFConfig, bins, y, edges, seed: int = 0):
+    """Bagged trees: Poisson(1) bootstrap weights + per-tree feature masks.
+
+    Each tree fits the (weighted) target mean per leaf, which is recovered
+    from the GBDT grower with g = -w*y, h = w, lr = 1.  Classification
+    trains one probability ensemble per class (one-vs-rest), predictions
+    are averaged over trees.
+    """
+    gcfg = GBDTConfig(
+        task="regression",
+        n_rounds=1,
+        max_depth=cfg.max_depth,
+        learning_rate=1.0,
+        reg_lambda=cfg.reg_lambda,
+        min_child_samples=cfg.min_child_samples,
+        leaf_capacity=cfg.n_trees * (2**cfg.max_depth) * max(cfg.n_ensembles, 1),
+    )
+    n, d = bins.shape
+    E = edges.shape[1]
+    C = cfg.n_ensembles
+    D = cfg.max_depth
+    I, L = 2**D - 1, 2**D
+    key = jax.random.PRNGKey(seed)
+
+    if cfg.task == "multiclass":
+        targets = jax.nn.one_hot(y.astype(jnp.int32), C, dtype=jnp.float32)
+    elif cfg.task == "binary":
+        targets = y.astype(jnp.float32)[:, None]
+    else:
+        targets = y.astype(jnp.float32)[:, None]
+
+    @jax.jit
+    def one_tree(key, y_c):
+        kw, kf = jax.random.split(key)
+        w = jax.random.poisson(kw, 1.0, (n,)).astype(jnp.float32)
+        keep = jax.random.uniform(kf, (d,)) < cfg.feature_fraction
+        masked_edges = jnp.where(keep[:, None], edges, jnp.inf)
+        state = (
+            jnp.zeros((d,), bool),
+            jnp.zeros((d, E), bool),
+            jnp.zeros((L,), jnp.float32),
+            jnp.zeros((), jnp.int32),
+            jnp.float32(0.0),
+            jnp.float32(0.0),
+        )
+        tree, _, n_sp, state = _grow_tree(
+            gcfg, bins, -w * y_c, w, masked_edges, state
+        )
+        t_feat, t_thr, t_split, lref, t_gain, c_leaf = tree
+        leaf_vals = state[2]
+        return t_feat, t_thr, t_split, leaf_vals[lref], n_sp
+
+    trees = []
+    for t in range(cfg.n_trees):
+        key, sub = jax.random.split(key)
+        for c in range(C):
+            trees.append(one_tree(sub, targets[:, c]))
+
+    feats = jnp.stack([t[0] for t in trees])
+    thrs = jnp.stack([t[1] for t in trees])
+    splits = jnp.stack([t[2] for t in trees])
+    leaf_val = jnp.stack([t[3] for t in trees])  # (T, L) values directly
+    n_splits = int(sum(int(t[4]) for t in trees))
+
+    Tn = len(trees)
+    # materialize a Forest with a flat value table (no sharing for RF)
+    leaf_ref = jnp.arange(Tn * L, dtype=jnp.int32).reshape(Tn, L)
+    forest = Forest(
+        feature=feats,
+        thr_bin=thrs,
+        is_split=splits,
+        leaf_ref=leaf_ref,
+        leaf_values=leaf_val.reshape(-1),
+        n_leaf_values=jnp.asarray(Tn * L, jnp.int32),
+        n_trees=jnp.asarray(Tn, jnp.int32),
+        edges=edges,
+        base_score=jnp.zeros((C,), jnp.float32),
+        n_ensembles=C,
+    )
+    return forest, n_splits
+
+
+def rf_predict(forest: Forest, bins) -> jax.Array:
+    """Average (not sum) of tree outputs, as RF does."""
+    C = forest.n_ensembles
+    total = predict_binned(forest, bins)
+    n_per_class = jnp.maximum(forest.n_trees // C, 1)
+    return total / n_per_class
+
+
+def rf_bits(n_splits: int, n_trees: int, n_classes: int = 1) -> int:
+    """Pointer layout; RF leaves store the per-class distribution, so each
+    leaf pays (C-1) extra fp32 values relative to the boosted accounting."""
+    leaves = n_splits + n_trees
+    return (2 * n_splits + n_trees) * 128 + leaves * 32 * max(n_classes - 1, 0)
+
+
+def margin_diversity_order(tree_preds: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Guo et al. (2018) style margin&diversity ensemble ordering.
+
+    tree_preds: (T, n) per-tree predicted class id (or sign for binary).
+    Returns tree indices in selection order; keep a prefix to prune.
+    """
+    T, n = tree_preds.shape
+    correct = (tree_preds == y[None, :]).astype(np.float64)
+    chosen: list[int] = []
+    remaining = set(range(T))
+    votes = np.zeros(n)
+    for _ in range(T):
+        best, best_score = None, -np.inf
+        for t in remaining:
+            new_votes = votes + 2 * correct[t] - 1
+            margin = np.mean(np.tanh(new_votes / max(len(chosen) + 1, 1)))
+            div = 1.0 - (np.mean(correct[t] == (votes > 0)) if chosen else 0.0)
+            score = margin + 0.1 * div
+            if score > best_score:
+                best, best_score = t, score
+        chosen.append(best)
+        remaining.discard(best)
+        votes += 2 * correct[best] - 1
+    return np.asarray(chosen)
+
+
+def take_trees(forest: Forest, idx: np.ndarray) -> Forest:
+    """Subset/reorder trees (used by ensemble pruning)."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return dataclasses.replace(
+        forest,
+        feature=forest.feature[idx],
+        thr_bin=forest.thr_bin[idx],
+        is_split=forest.is_split[idx],
+        leaf_ref=forest.leaf_ref[idx],
+        n_trees=jnp.asarray(len(idx), jnp.int32),
+    )

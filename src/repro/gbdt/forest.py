@@ -1,0 +1,171 @@
+"""In-memory representation of a boosted complete-tree ensemble.
+
+The layout mirrors the paper's pointer-less scheme (Sec. 3.2.1): every tree
+is a *complete* binary tree of depth ``max_depth``; the children of the node
+stored at index ``i`` live at ``2i+1`` (left) and ``2i+2`` (right).  Internal
+node slots that did not split are marked ``is_split == False`` and route
+traffic to their *left* subtree, so every traversal terminates in one of the
+``2**max_depth`` leaf slots.
+
+Leaf slots do not store values directly; they store *references* into the
+global leaf-value table (paper Sec. 3.2.2), which is shared across all trees
+and, for multiclass problems, across all per-class ensembles.
+
+Thresholds are bin-edge indices: ``thr_bin[t, i] == e`` means the split test
+is ``x[feature] <= edges[feature, e]``.  Training operates on binned inputs
+where ``bin(x) = sum_j [x > edges_j]`` so the binned test ``bin <= e`` is
+exactly equivalent to the raw test.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "feature",
+        "thr_bin",
+        "is_split",
+        "leaf_ref",
+        "leaf_values",
+        "n_leaf_values",
+        "n_trees",
+        "edges",
+        "base_score",
+    ],
+    meta_fields=["n_ensembles"],
+)
+@dataclasses.dataclass(frozen=True)
+class Forest:
+    """A boosted ensemble of complete binary trees.
+
+    Shapes (``T`` = capacity in trees, ``I = 2**D - 1`` internal slots,
+    ``L = 2**D`` leaf slots, ``V`` = leaf-table capacity, ``d`` = number of
+    input features, ``E`` = bins - 1 candidate edges per feature):
+    """
+
+    feature: jax.Array      # (T, I) int32, input feature index per internal slot
+    thr_bin: jax.Array      # (T, I) int32, edge index into ``edges[feature]``
+    is_split: jax.Array     # (T, I) bool
+    leaf_ref: jax.Array     # (T, L) int32 index into ``leaf_values``
+    leaf_values: jax.Array  # (V,) float32 global shared leaf-value table
+    n_leaf_values: jax.Array  # () int32, #used slots in ``leaf_values``
+    n_trees: jax.Array      # () int32, #trees actually grown (<= T)
+    edges: jax.Array        # (d, E) float32 candidate thresholds (bin edges)
+    base_score: jax.Array   # (C,) float32 initial prediction per ensemble
+    n_ensembles: int = 1    # C; trees are stored round-major: tree r*C + c
+
+    # ------------------------------------------------------------------ meta
+    @property
+    def max_depth(self) -> int:
+        return int(np.log2(self.leaf_ref.shape[1]))
+
+    @property
+    def tree_capacity(self) -> int:
+        return self.feature.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self.edges.shape[0]
+
+    @property
+    def n_bins(self) -> int:
+        return self.edges.shape[1] + 1
+
+
+# --------------------------------------------------------------------------
+# Reference prediction (pure jnp; the oracle for kernels/packed layouts)
+# --------------------------------------------------------------------------
+
+
+def _traverse_one_tree(feature, thr_bin, is_split, leaf_ref, bins):
+    """Return the leaf-table reference reached by every row of ``bins``.
+
+    feature/thr_bin/is_split: (I,), leaf_ref: (L,), bins: (n, d) int32.
+    """
+    depth = int(np.log2(leaf_ref.shape[0]))
+    n = bins.shape[0]
+    idx = jnp.zeros((n,), dtype=jnp.int32)
+    n_internal = feature.shape[0]
+    for _ in range(depth):
+        feat = feature[idx]                 # (n,)
+        thr = thr_bin[idx]
+        split = is_split[idx]
+        x_bin = jnp.take_along_axis(bins, feat[:, None], axis=1)[:, 0]
+        go_left = jnp.where(split, x_bin <= thr, True)
+        idx = 2 * idx + jnp.where(go_left, 1, 2)
+    return leaf_ref[idx - n_internal]
+
+
+def predict_binned(forest: Forest, bins: jax.Array) -> jax.Array:
+    """Ensemble prediction from pre-binned inputs.
+
+    Args:
+      forest: the ensemble.
+      bins: (n, d) integer bin ids, ``bin = sum_j [x > edges_j]``.
+
+    Returns:
+      (n, C) raw scores (sum of per-class trees + base score).
+    """
+    n = bins.shape[0]
+    C = forest.n_ensembles
+    bins = bins.astype(jnp.int32)
+
+    def body(acc, tree):
+        t_idx, feat, thr, split, lref = tree
+        ref = _traverse_one_tree(feat, thr, split, lref, bins)
+        contrib = forest.leaf_values[ref]                       # (n,)
+        active = (t_idx < forest.n_trees).astype(contrib.dtype)
+        cls = t_idx % C
+        acc = acc + contrib[:, None] * active * jax.nn.one_hot(cls, C, dtype=contrib.dtype)
+        return acc, None
+
+    acc0 = jnp.zeros((n, C), dtype=jnp.float32) + forest.base_score[None, :]
+    trees = (
+        jnp.arange(forest.tree_capacity, dtype=jnp.int32),
+        forest.feature,
+        forest.thr_bin,
+        forest.is_split,
+        forest.leaf_ref,
+    )
+    acc, _ = jax.lax.scan(body, acc0, trees)
+    return acc
+
+
+def predict_raw(forest: Forest, x: jax.Array) -> jax.Array:
+    """Prediction from raw (un-binned) float inputs, as a deployed model would."""
+    from repro.gbdt.binning import apply_bins
+
+    return predict_binned(forest, apply_bins(x, forest.edges))
+
+
+def empty_forest(
+    n_features: int,
+    n_edges: int,
+    tree_capacity: int,
+    max_depth: int,
+    leaf_capacity: int,
+    n_ensembles: int = 1,
+) -> Forest:
+    """An all-unsplit forest with zeroed tables (used as the trainer's carry)."""
+    I = 2**max_depth - 1
+    L = 2**max_depth
+    return Forest(
+        feature=jnp.zeros((tree_capacity, I), jnp.int32),
+        thr_bin=jnp.zeros((tree_capacity, I), jnp.int32),
+        is_split=jnp.zeros((tree_capacity, I), bool),
+        leaf_ref=jnp.zeros((tree_capacity, L), jnp.int32),
+        leaf_values=jnp.zeros((leaf_capacity,), jnp.float32),
+        n_leaf_values=jnp.zeros((), jnp.int32),
+        n_trees=jnp.zeros((), jnp.int32),
+        edges=jnp.zeros((n_features, n_edges), jnp.float32),
+        base_score=jnp.zeros((n_ensembles,), jnp.float32),
+        n_ensembles=n_ensembles,
+    )

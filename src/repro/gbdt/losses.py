@@ -1,0 +1,119 @@
+"""Losses for the GBDT engine: gradients/hessians + base scores + metrics.
+
+Multiclass follows the paper (and LightGBM): one ensemble per class trained
+against softmax gradients.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    name: str
+    n_ensembles: int
+
+    def base_score(self, y: jax.Array) -> jax.Array:
+        s, c = self.base_stats(y)
+        return self.base_from_stats(s, c)
+
+    def base_stats(self, y: jax.Array):
+        """(sum vector, count) — psum these for data-parallel training."""
+        raise NotImplementedError
+
+    def base_from_stats(self, s: jax.Array, count: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def grad_hess(self, y: jax.Array, preds: jax.Array):
+        raise NotImplementedError
+
+    def metric(self, y: jax.Array, preds: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class SquaredError(Loss):
+    name: str = "mse"
+    n_ensembles: int = 1
+
+    def base_stats(self, y):
+        return jnp.sum(y)[None], jnp.asarray(y.shape[0], jnp.float32)
+
+    def base_from_stats(self, s, count):
+        return s / count
+
+    def grad_hess(self, y, preds):
+        g = preds[:, 0] - y
+        h = jnp.ones_like(g)
+        return g[:, None], h[:, None]
+
+    def metric(self, y, preds):
+        """R^2 score (higher is better), as in the paper's regression plots."""
+        p = preds[:, 0]
+        ss_res = jnp.sum((y - p) ** 2)
+        ss_tot = jnp.sum((y - jnp.mean(y)) ** 2)
+        return 1.0 - ss_res / jnp.maximum(ss_tot, 1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class Logistic(Loss):
+    name: str = "logistic"
+    n_ensembles: int = 1
+
+    def base_stats(self, y):
+        return jnp.sum(y)[None], jnp.asarray(y.shape[0], jnp.float32)
+
+    def base_from_stats(self, s, count):
+        p = jnp.clip(s / count, 1e-6, 1 - 1e-6)
+        return jnp.log(p / (1 - p))
+
+    def grad_hess(self, y, preds):
+        s = jax.nn.sigmoid(preds[:, 0])
+        g = s - y
+        h = s * (1.0 - s)
+        return g[:, None], h[:, None]
+
+    def metric(self, y, preds):
+        pred_label = (preds[:, 0] > 0).astype(y.dtype)
+        return jnp.mean(pred_label == y)
+
+
+@dataclasses.dataclass(frozen=True)
+class Softmax(Loss):
+    """One ensemble per class (paper Sec. 4.2: 'one ensemble per class')."""
+
+    name: str = "softmax"
+    n_ensembles: int = 2
+
+    def base_stats(self, y):
+        onehot = jax.nn.one_hot(y.astype(jnp.int32), self.n_ensembles)
+        return jnp.sum(onehot, axis=0), jnp.asarray(y.shape[0], jnp.float32)
+
+    def base_from_stats(self, s, count):
+        prior = jnp.clip(s / count, 1e-6, 1.0)
+        return jnp.log(prior)
+
+    def grad_hess(self, y, preds):
+        p = jax.nn.softmax(preds, axis=-1)
+        onehot = jax.nn.one_hot(y.astype(jnp.int32), self.n_ensembles, dtype=p.dtype)
+        g = p - onehot
+        h = 2.0 * p * (1.0 - p)  # XGBoost's diagonal upper bound
+        return g, h
+
+    def metric(self, y, preds):
+        return jnp.mean(jnp.argmax(preds, axis=-1) == y.astype(jnp.int32))
+
+
+def make_loss(task: str, n_classes: int = 0) -> Loss:
+    if task == "regression":
+        return SquaredError()
+    if task == "binary":
+        return Logistic()
+    if task == "multiclass":
+        assert n_classes >= 2
+        return Softmax(n_ensembles=n_classes)
+    raise ValueError(f"unknown task {task!r}")

@@ -1,0 +1,437 @@
+"""Fixed-shape, jit-able histogram GBDT with the ToaD penalties.
+
+Faithful pieces (paper Sec. 3.1 / App. A):
+  * split gain `Δ_l = Δ − s_f·ι − s_t·ξ` against *global* used-feature /
+    used-threshold sets that persist across trees, classes and rounds;
+  * within a level, splits commit node-sequentially, so a feature paid for
+    by an earlier node is free for every later node (greedy semantics);
+  * global shared leaf-value table with reuse (Sec. 3.2.2), fixed capacity,
+    exact-match (optionally quantized) reuse inside jit;
+  * `toad_forestsize`: the exact ToaD stream size (core.memory.toad_bits)
+    is evaluated inside the jitted round loop; a round that would overflow
+    the budget is reverted and training stops — LightGBM-ToaD's
+    `toad_forestsize` behaviour;
+  * multiclass = one ensemble per class, trees stored round-major.
+
+Adaptation (recorded in DESIGN.md): growth is level-wise over complete
+trees rather than LightGBM's leaf-wise queue.  A leaf whose best penalized
+gain was non-positive is reconsidered on later levels through its left
+child (used-sets evolve, so a split may become worthwhile), which preserves
+the greedy always-positive-gain property.
+
+Everything is fixed-shape, so the whole trainer can be `jax.vmap`-ed over
+(ι, ξ, forestsize) — the paper's 676-model grid searches are a single
+batched jit call (see benchmarks/fig7_multivariate.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.memory import toad_bits
+from repro.gbdt.forest import Forest
+from repro.gbdt.losses import make_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class GBDTConfig:
+    task: str = "regression"          # regression | binary | multiclass
+    n_classes: int = 0
+    n_rounds: int = 64                # K boosting rounds (trees per class)
+    max_depth: int = 4
+    learning_rate: float = 0.1
+    reg_lambda: float = 1.0           # λ
+    gamma: float = 0.0                # γ per-leaf complexity
+    min_child_weight: float = 1e-3
+    min_child_samples: int = 1
+    toad_penalty_feature: float = 0.0   # ι
+    toad_penalty_threshold: float = 0.0 # ξ
+    toad_forestsize: float = 0.0      # byte budget; 0 = unlimited
+    leaf_capacity: int = 4096         # global leaf-value table capacity
+    leaf_match_tol: float = 0.0       # reuse tolerance (0 = exact match)
+    leaf_quant: float = 0.0           # optional leaf rounding grid
+    cegb_penalty_split: float = 0.0   # CEGB (Peter et al.) per-split cost × n_node/n
+    hist_dtype: str = "f32"           # f32 | bf16 histogram accumulation (§Perf)
+
+    @property
+    def n_ensembles(self) -> int:
+        return self.n_classes if self.task == "multiclass" else 1
+
+
+def _grow_tree(cfg: GBDTConfig, bins, g, h, edges, state, reduce_fn=None):
+    """Grow one complete tree level-wise.  Returns tree arrays + new state.
+
+    state: (used_feat, used_thr, leaf_values, n_leaf, pen_f, pen_t)
+    reduce_fn: cross-shard histogram reduction (data-parallel training);
+      identity when None.
+    """
+    used_feat, used_thr, leaf_values, n_leaf, pen_f, pen_t = state
+    reduce_fn = reduce_fn or (lambda x: x)
+    n, d = bins.shape
+    E = edges.shape[1]
+    B = E + 1
+    D = cfg.max_depth
+    I = 2**D - 1
+    L = 2**D
+    lam = cfg.reg_lambda
+    valid_edge = jnp.isfinite(edges)  # (d, E)
+
+    t_feat = jnp.zeros((I,), jnp.int32)
+    t_thr = jnp.zeros((I,), jnp.int32)
+    t_split = jnp.zeros((I,), bool)
+    t_gain = jnp.zeros((I,), jnp.float32)  # recorded for CCP post-pruning
+    pos = jnp.zeros((n,), jnp.int32)
+    dead = jnp.zeros((1,), bool)
+    n_splits = jnp.zeros((), jnp.int32)
+
+    for level in range(D):
+        n_nodes = 2**level
+        base_idx = n_nodes - 1
+        node_local = pos - base_idx  # (n,) in [0, n_nodes)
+
+        # --- gradient/hessian/count histograms: (nodes, d, B, 3) -----------
+        # bins may be int8 (4x less HBM traffic than int32 — §Perf); the
+        # upcast fuses into the id computation.
+        ids = (
+            node_local[:, None] * (d * B)
+            + jnp.arange(d, dtype=jnp.int32)[None, :] * B
+            + bins.astype(jnp.int32)
+        ).reshape(-1)
+        hdt = jnp.bfloat16 if cfg.hist_dtype == "bf16" else jnp.float32
+        data = jnp.stack(
+            [
+                jnp.broadcast_to(g[:, None], (n, d)).reshape(-1),
+                jnp.broadcast_to(h[:, None], (n, d)).reshape(-1),
+                jnp.ones((n * d,), jnp.float32),
+            ],
+            axis=-1,
+        ).astype(hdt)
+        hist = jax.ops.segment_sum(data, ids, num_segments=n_nodes * d * B)
+        # data-parallel training: one all-reduce of the (nodes, d, B, 3)
+        # histogram per level — the distributed-LightGBM pattern.
+        hist = reduce_fn(hist.reshape(n_nodes, d, B, 3)).astype(jnp.float32)
+        G, H, CNT = hist[..., 0], hist[..., 1], hist[..., 2]
+
+        # --- standard gain for every (node, feature, edge) ------------------
+        GL = jnp.cumsum(G, axis=-1)[..., :E]
+        HL = jnp.cumsum(H, axis=-1)[..., :E]
+        CL = jnp.cumsum(CNT, axis=-1)[..., :E]
+        totG = jnp.sum(G, axis=-1)  # (nodes, d) — identical across d
+        totH = jnp.sum(H, axis=-1)
+        totC = jnp.sum(CNT, axis=-1)
+        GR = totG[..., None] - GL
+        HR = totH[..., None] - HL
+        CR = totC[..., None] - CL
+        gain = (
+            0.5
+            * (
+                GL**2 / (HL + lam)
+                + GR**2 / (HR + lam)
+                - (totG[..., None] ** 2) / (totH[..., None] + lam)
+            )
+            - cfg.gamma
+        )
+        valid = (
+            (CL >= cfg.min_child_samples)
+            & (CR >= cfg.min_child_samples)
+            & (HL >= cfg.min_child_weight)
+            & (HR >= cfg.min_child_weight)
+            & valid_edge[None, :, :]
+        )
+
+        # --- sequential (greedy) commit: later nodes see earlier nodes' ----
+        # --- newly used features/thresholds, per the paper's used sets  ----
+        def commit(j, carry):
+            used_feat, used_thr, t_feat, t_thr, t_split, t_gain, n_splits = carry
+            pen = pen_f * (~used_feat[:, None]) + pen_t * (~used_thr)
+            # CEGB (Peter et al. 2017): per-split evaluation cost scaled by
+            # the fraction of samples that must traverse this node.
+            split_cost = cfg.cegb_penalty_split * totC[j, 0] / n
+            eff = jnp.where(valid[j], gain[j] - pen - split_cost, -jnp.inf)
+            flat = jnp.argmax(eff)
+            f = (flat // E).astype(jnp.int32)
+            e = (flat % E).astype(jnp.int32)
+            ok = (eff.reshape(-1)[flat] > 0.0) & ~dead[j]
+            node = base_idx + j
+            t_feat = t_feat.at[node].set(jnp.where(ok, f, t_feat[node]))
+            t_thr = t_thr.at[node].set(jnp.where(ok, e, t_thr[node]))
+            t_split = t_split.at[node].set(ok | t_split[node])
+            t_gain = t_gain.at[node].set(
+                jnp.where(ok, gain[j].reshape(-1)[flat], t_gain[node])
+            )
+            used_feat = used_feat.at[f].set(used_feat[f] | ok)
+            used_thr = used_thr.at[f, e].set(used_thr[f, e] | ok)
+            return used_feat, used_thr, t_feat, t_thr, t_split, t_gain, n_splits + ok
+
+        used_feat, used_thr, t_feat, t_thr, t_split, t_gain, n_splits = jax.lax.fori_loop(
+            0,
+            n_nodes,
+            commit,
+            (used_feat, used_thr, t_feat, t_thr, t_split, t_gain, n_splits),
+        )
+
+        # --- route samples (unsplit nodes route left) -----------------------
+        f_n = t_feat[pos]
+        e_n = t_thr[pos]
+        s_n = t_split[pos]
+        xb = jnp.take_along_axis(bins, f_n[:, None], axis=1)[:, 0].astype(jnp.int32)
+        go_left = jnp.where(s_n, xb <= e_n, True)
+        pos = 2 * pos + jnp.where(go_left, 1, 2)
+
+        # left child of a live unsplit node stays live (may split later once
+        # penalties have been paid by other nodes); right child is dead.
+        split_lvl = jax.lax.dynamic_slice_in_dim(t_split, base_idx, n_nodes)
+        dead = jnp.stack([dead, dead | ~split_lvl], axis=1).reshape(-1)
+
+    # ---------------- leaves ------------------------------------------------
+    leaf_local = pos - (2**D - 1)
+    leaf_stats = reduce_fn(
+        jax.ops.segment_sum(
+            jnp.stack([g, h, jnp.ones_like(g)], axis=-1), leaf_local, num_segments=L
+        )
+    )
+    G_leaf, H_leaf, C_leaf = leaf_stats[:, 0], leaf_stats[:, 1], leaf_stats[:, 2]
+    raw_v = jnp.where(
+        C_leaf > 0, -cfg.learning_rate * G_leaf / (H_leaf + lam), 0.0
+    ).astype(jnp.float32)
+    if cfg.leaf_quant > 0:
+        raw_v = jnp.round(raw_v / cfg.leaf_quant) * cfg.leaf_quant
+    reachable = ~dead  # (L,) leaf-level liveness
+
+    V = leaf_values.shape[0]
+
+    def insert(j, carry):
+        leaf_values, n_leaf, lref = carry
+        v = raw_v[j]
+        valid_slot = jnp.arange(V) < n_leaf
+        diffs = jnp.where(valid_slot, jnp.abs(leaf_values - v), jnp.inf)
+        best = jnp.argmin(diffs).astype(jnp.int32)
+        match = diffs[best] <= cfg.leaf_match_tol
+        can_append = n_leaf < V
+        reach = reachable[j]
+        use_new = reach & ~match & can_append
+        ref = jnp.where(match | ~can_append, best, n_leaf)
+        ref = jnp.where(reach, ref, 0).astype(jnp.int32)
+        appended = leaf_values.at[n_leaf].set(v)
+        leaf_values = jnp.where(use_new, appended, leaf_values)
+        n_leaf = n_leaf + use_new.astype(jnp.int32)
+        return leaf_values, n_leaf, lref.at[j].set(ref)
+
+    leaf_values, n_leaf, lref = jax.lax.fori_loop(
+        0, L, insert, (leaf_values, n_leaf, jnp.zeros((L,), jnp.int32))
+    )
+
+    # per-sample contribution of this tree (through the shared table, so any
+    # lossy reuse is reflected in subsequent gradients)
+    contrib = leaf_values[lref[leaf_local]]
+
+    new_state = (used_feat, used_thr, leaf_values, n_leaf, pen_f, pen_t)
+    tree = (t_feat, t_thr, t_split, lref, t_gain, C_leaf)
+    return tree, contrib, n_splits, new_state
+
+
+def train(
+    cfg: GBDTConfig,
+    bins: jax.Array,
+    y: jax.Array,
+    edges: jax.Array,
+    penalty_feature: jax.Array | float | None = None,
+    penalty_threshold: jax.Array | float | None = None,
+    forestsize: jax.Array | float | None = None,
+    axis_name: str | None = None,
+    hist_quant_bits: int = 0,
+):
+    """Train a ToaD-regularized GBDT.  Fully jittable; vmappable over the
+    three runtime hyperparameters.
+
+    Args:
+      cfg: static configuration.
+      bins: (n, d) int32 pre-binned features (see gbdt.binning).
+      y: (n,) float32 targets (class ids as floats for classification).
+      edges: (d, E) float32 bin edges (+inf = invalid candidate).
+      penalty_feature/penalty_threshold/forestsize: runtime overrides of
+        ι, ξ and the byte budget (default: the cfg values).
+      axis_name: when run under shard_map with rows sharded over this mesh
+        axis, histograms/leaf stats/base scores are psum'd so every shard
+        grows identical trees (distributed-LightGBM data parallelism).
+      hist_quant_bits: 0 = exact fp32 all-reduce; 8/16 = quantized
+        histogram collectives (Shi et al. 2022 style) to cut ICI bytes.
+
+    Returns:
+      (Forest, history dict of per-round arrays, aux dict).
+    """
+    loss = make_loss(cfg.task, cfg.n_classes)
+    C = loss.n_ensembles
+    n, d = bins.shape
+    E = edges.shape[1]
+    D = cfg.max_depth
+    I = 2**D - 1
+    L = 2**D
+    M = cfg.n_rounds
+    T = M * C
+
+    pen_f = jnp.float32(cfg.toad_penalty_feature if penalty_feature is None else penalty_feature)
+    pen_t = jnp.float32(cfg.toad_penalty_threshold if penalty_threshold is None else penalty_threshold)
+    budget = jnp.float32(cfg.toad_forestsize if forestsize is None else forestsize)
+
+    if axis_name is None:
+        reduce_fn = None
+    elif hist_quant_bits:
+        from repro.distributed.collectives import quantized_psum
+
+        reduce_fn = lambda x: quantized_psum(x, axis_name, bits=hist_quant_bits)
+    else:
+        reduce_fn = lambda x: jax.lax.psum(x, axis_name)
+
+    # bins keep their storage dtype (int8 preferred); casts fuse at use
+    y = y.astype(jnp.float32)
+    s, cnt = loss.base_stats(y)
+    if axis_name is not None:
+        s = jax.lax.psum(s, axis_name)
+        cnt = jax.lax.psum(cnt, axis_name)
+    base = loss.base_from_stats(s, cnt).astype(jnp.float32)
+
+    state0 = dict(
+        feature=jnp.zeros((T, I), jnp.int32),
+        thr_bin=jnp.zeros((T, I), jnp.int32),
+        is_split=jnp.zeros((T, I), bool),
+        leaf_ref=jnp.zeros((T, L), jnp.int32),
+        node_gain=jnp.zeros((T, I), jnp.float32),
+        leaf_cnt=jnp.zeros((T, L), jnp.float32),
+        leaf_values=jnp.zeros((cfg.leaf_capacity,), jnp.float32),
+        n_leaf=jnp.zeros((), jnp.int32),
+        used_feat=jnp.zeros((d,), bool),
+        used_thr=jnp.zeros((d, E), bool),
+        preds=jnp.broadcast_to(base[None, :], (n, C)).astype(jnp.float32),
+        n_splits=jnp.zeros((), jnp.int32),
+        n_trees=jnp.zeros((), jnp.int32),
+        stopped=jnp.zeros((), bool),
+    )
+
+    def round_body(state, r):
+        g_all, h_all = loss.grad_hess(y, state.get("preds"))
+        tree_state = (
+            state["used_feat"],
+            state["used_thr"],
+            state["leaf_values"],
+            state["n_leaf"],
+            pen_f,
+            pen_t,
+        )
+        new = dict(state)
+        contribs = []
+        round_splits = jnp.zeros((), jnp.int32)
+        for c in range(C):
+            tree, contrib, n_sp, tree_state = _grow_tree(
+                cfg, bins, g_all[:, c], h_all[:, c], edges, tree_state, reduce_fn
+            )
+            t_idx = r * C + c
+            t_feat, t_thr, t_split, lref, t_gain, c_leaf = tree
+            new["feature"] = jax.lax.dynamic_update_slice_in_dim(
+                new["feature"], t_feat[None], t_idx, axis=0
+            )
+            new["thr_bin"] = jax.lax.dynamic_update_slice_in_dim(
+                new["thr_bin"], t_thr[None], t_idx, axis=0
+            )
+            new["is_split"] = jax.lax.dynamic_update_slice_in_dim(
+                new["is_split"], t_split[None], t_idx, axis=0
+            )
+            new["leaf_ref"] = jax.lax.dynamic_update_slice_in_dim(
+                new["leaf_ref"], lref[None], t_idx, axis=0
+            )
+            new["node_gain"] = jax.lax.dynamic_update_slice_in_dim(
+                new["node_gain"], t_gain[None], t_idx, axis=0
+            )
+            new["leaf_cnt"] = jax.lax.dynamic_update_slice_in_dim(
+                new["leaf_cnt"], c_leaf[None], t_idx, axis=0
+            )
+            contribs.append(contrib)
+            round_splits = round_splits + n_sp
+        (
+            new["used_feat"],
+            new["used_thr"],
+            new["leaf_values"],
+            new["n_leaf"],
+            _,
+            _,
+        ) = tree_state
+        new["preds"] = state["preds"] + jnp.stack(contribs, axis=1)
+        new["n_splits"] = state["n_splits"] + round_splits
+        new["n_trees"] = state["n_trees"] + C
+
+        bits = toad_bits(
+            new["used_feat"],
+            new["used_thr"],
+            new["n_leaf"],
+            new["n_trees"],
+            new["n_splits"],
+            edges,
+            D,
+            C,
+        )
+        mem_ok = (budget <= 0) | (bits.astype(jnp.float32) <= budget * 8.0)
+        accept = (~state["stopped"]) & (round_splits > 0) & mem_ok
+        merged = jax.tree.map(
+            lambda a, b: jnp.where(accept, a, b), new, state
+        )
+        merged["stopped"] = state["stopped"] | ~accept
+        hist_out = dict(
+            bytes=bits.astype(jnp.float32) / 8.0,
+            accepted=accept,
+            n_fu=jnp.sum(merged["used_feat"].astype(jnp.int32)),
+            n_thr=jnp.sum(merged["used_thr"].astype(jnp.int32)),
+            n_leaf=merged["n_leaf"],
+            n_splits=merged["n_splits"],
+        )
+        return merged, hist_out
+
+    final, history = jax.lax.scan(round_body, state0, jnp.arange(M, dtype=jnp.int32))
+
+    forest = Forest(
+        feature=final["feature"],
+        thr_bin=final["thr_bin"],
+        is_split=final["is_split"],
+        leaf_ref=final["leaf_ref"],
+        leaf_values=final["leaf_values"],
+        n_leaf_values=final["n_leaf"],
+        n_trees=final["n_trees"],
+        edges=edges,
+        base_score=base,
+        n_ensembles=C,
+    )
+    aux = dict(
+        used_feat=final["used_feat"],
+        used_thr=final["used_thr"],
+        preds=final["preds"],
+        node_gain=final["node_gain"],
+        leaf_cnt=final["leaf_cnt"],
+        toad_bytes=toad_bits(
+            final["used_feat"],
+            final["used_thr"],
+            final["n_leaf"],
+            final["n_trees"],
+            final["n_splits"],
+            edges,
+            D,
+            C,
+        ).astype(jnp.float32)
+        / 8.0,
+    )
+    return forest, history, aux
+
+
+train_jit = jax.jit(train, static_argnums=0)
+
+
+@partial(jax.jit, static_argnums=0)
+def train_grid(cfg: GBDTConfig, bins, y, edges, pen_f_grid, pen_t_grid, forestsize_grid):
+    """The paper's penalty grid searches as a single vmapped jit call.
+
+    pen_*_grid / forestsize_grid: (G,) arrays — one trained model per entry.
+    """
+    fn = lambda pf, pt, fs: train(cfg, bins, y, edges, pf, pt, fs)
+    return jax.vmap(fn)(pen_f_grid, pen_t_grid, forestsize_grid)

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: quantile binning (bucketize) of raw features.
+
+``bin = #{edges < x}`` computed by broadcast-compare against the edge table
+held in VMEM, accumulating over edge chunks to bound the VMEM working set.
+Pure VPU work; the sample tile streams, the edge table is resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 512
+EDGE_CHUNK = 32
+
+
+def _kernel(x_ref, edges_ref, out_ref, *, n_edges: int):
+    x = x_ref[...]            # (TILE, d)
+    edges = edges_ref[...]    # (d, E)
+    acc = jnp.zeros(x.shape, jnp.int32)
+    n_chunks = -(-n_edges // EDGE_CHUNK)
+    for c in range(n_chunks):
+        lo = c * EDGE_CHUNK
+        width = min(EDGE_CHUNK, n_edges - lo)
+        e = jax.lax.dynamic_slice_in_dim(edges, lo, width, axis=1)  # (d, w)
+        # (TILE, d, w) compare; +inf edges never count
+        acc = acc + jnp.sum(
+            (x[:, :, None] > e[None, :, :]).astype(jnp.int32), axis=-1
+        )
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def binning(x, edges, *, interpret: bool = True):
+    """(n, d) floats × (d, E) edges -> (n, d) int32 bin ids."""
+    n, d = x.shape
+    E = edges.shape[1]
+    n_pad = -n % TILE
+    if n_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+    n_tiles = (n + n_pad) // TILE
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_edges=E),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((TILE, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, E), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, d), jnp.int32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), edges.astype(jnp.float32))
+    return out[:n]

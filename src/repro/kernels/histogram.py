@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: gradient-histogram building via one-hot MXU matmuls.
+
+LightGBM's histogram step is a random scatter-add — hostile to TPUs.  The
+TPU-native form (DESIGN.md §3): for a tile of samples, build a one-hot
+``(tile, n_nodes*n_bins)`` matrix from the combined (node, bin) id and
+contract it with the per-sample channel matrix ``[g, h, 1]`` on the MXU:
+
+    hist[node*B + b, ch] += sum_s onehot[s, node*B + b] * gh[s, ch]
+
+Grid: (node_chunks, features, sample_tiles) — the sample-tile axis is the
+innermost (fastest) so each (chunk, feature) output block is revisited and
+accumulated in place, a standard Pallas reduction pattern.
+
+Alignment notes (TPU target): TILE=512 samples keeps the one-hot contraction
+MXU-shaped (512×NB @ 512×8); NB = NODE_CHUNK*n_bins is a multiple of 128 for
+n_bins ∈ {64, 128, 256}; channels are padded to 8 lanes by XLA.  fp32
+accumulation throughout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 512
+NODE_CHUNK = 8
+
+
+def _kernel(bins_ref, gh_ref, pos_ref, out_ref, *, n_bins: int, node_chunk: int):
+    nc = pl.program_id(0)
+    tile = pl.program_id(2)
+
+    bins = bins_ref[...]          # (TILE, 1) int32 — this feature's bin ids
+    gh = gh_ref[...]              # (TILE, CH) float32
+    pos = pos_ref[...]            # (TILE, 1) int32 node-local ids
+
+    local = pos - nc * node_chunk                       # (TILE, 1)
+    valid = (local >= 0) & (local < node_chunk)
+    ids = local * n_bins + bins                         # (TILE, 1)
+    nb = node_chunk * n_bins
+    iota = jax.lax.broadcasted_iota(jnp.int32, (TILE, nb), 1)
+    onehot = jnp.where((iota == ids) & valid, 1.0, 0.0)  # (TILE, NB) fp32
+
+    # (NB, TILE) @ (TILE, CH) on the MXU
+    acc = jax.lax.dot_general(
+        onehot,
+        gh,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (NB, CH)
+
+    @pl.when(tile == 0)
+    def _init():
+        out_ref[...] = acc[None, None]
+
+    @pl.when(tile != 0)
+    def _acc():
+        out_ref[...] += acc[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "interpret"))
+def histogram(bins, gh, pos, *, n_nodes: int, n_bins: int, interpret: bool = True):
+    """(n, d) bins × (n, CH) channels × (n,) node ids -> (n_nodes, d, n_bins, CH).
+
+    Drop-in replacement for ref.histogram_ref; validated against it in
+    tests/test_kernels.py over shape/dtype sweeps.
+    """
+    n, d = bins.shape
+    CH = gh.shape[1]
+    n_pad = -n % TILE
+    if n_pad:
+        bins = jnp.pad(bins, ((0, n_pad), (0, 0)))
+        gh = jnp.pad(gh, ((0, n_pad), (0, 0)))  # zero channels: no contribution
+        pos = jnp.pad(pos, (0, n_pad))
+    n_tiles = (n + n_pad) // TILE
+    n_chunks = -(-n_nodes // NODE_CHUNK)
+    nb = NODE_CHUNK * n_bins
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_bins=n_bins, node_chunk=NODE_CHUNK),
+        grid=(n_chunks, d, n_tiles),
+        in_specs=[
+            pl.BlockSpec((TILE, 1), lambda nc, f, i: (i, f)),
+            pl.BlockSpec((TILE, CH), lambda nc, f, i: (i, 0)),
+            pl.BlockSpec((TILE, 1), lambda nc, f, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, nb, CH), lambda nc, f, i: (nc, f, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, d, nb, CH), jnp.float32),
+        interpret=interpret,
+    )(bins.astype(jnp.int32), gh.astype(jnp.float32), pos.astype(jnp.int32)[:, None])
+
+    # (chunks, d, NODE_CHUNK*B, CH) -> (chunks*NODE_CHUNK, d, B, CH) -> trim
+    out = out.reshape(n_chunks, d, NODE_CHUNK, n_bins, CH).transpose(0, 2, 1, 3, 4)
+    out = out.reshape(n_chunks * NODE_CHUNK, d, n_bins, CH)
+    return out[:n_nodes]

@@ -1,0 +1,47 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the container is CPU-only); on a
+real TPU backend the compiled kernels run natively.  ``predict_packed_model``
+is the deployment entry point: it takes the artifact produced by
+``repro.core.to_packed`` directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import PackedEnsemble
+from repro.kernels.binning import binning
+from repro.kernels.histogram import histogram
+from repro.kernels.predict import packed_predict
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def build_histogram(bins, gh, pos, *, n_nodes: int, n_bins: int):
+    return histogram(bins, gh, pos, n_nodes=n_nodes, n_bins=n_bins, interpret=_interp())
+
+
+def apply_binning(x, edges):
+    return binning(x, edges, interpret=_interp())
+
+
+def predict_packed_model(packed: PackedEnsemble, x) -> jax.Array:
+    """(n, d) raw floats -> (n, C) scores, straight from the packed artifact."""
+    return packed_predict(
+        jnp.asarray(x),
+        jnp.asarray(packed.words),
+        jnp.asarray(packed.leaf_ref),
+        jnp.asarray(packed.leaf_values),
+        jnp.asarray(packed.thr_table),
+        jnp.asarray(packed.thr_offsets),
+        jnp.asarray(packed.used_features),
+        jnp.asarray(packed.base_score),
+        max_depth=packed.max_depth,
+        tidx_bits=packed.tidx_bits,
+        n_ensembles=packed.n_ensembles,
+        interpret=_interp(),
+    )

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: inference over the bit-packed ToaD ensemble.
+
+The compressed model (node words + global threshold/leaf tables) is a few
+KB, so every model array is mapped as a whole-array VMEM block — the TPU
+analogue of the paper's "model fits in MCU RAM".  Per depth step the kernel
+
+  1. gathers each lane's current node word,
+  2. decodes (feature_ref, thr_idx) with shifts/masks (VPU integer ops),
+  3. fetches x[feature] and the threshold from the VMEM-resident tables,
+  4. advances ``idx <- 2*idx + 1 + [x > μ]`` (pointer-less traversal).
+
+Only the sample tile streams from HBM; traversal never touches HBM, which
+turns tree inference from a memory-bound pointer chase into VPU compute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def _kernel(
+    x_ref,
+    words_ref,
+    lref_ref,
+    leaf_ref,
+    thr_ref,
+    off_ref,
+    feat_ref,
+    base_ref,
+    out_ref,
+    *,
+    max_depth: int,
+    tidx_bits: int,
+    n_ensembles: int,
+):
+    x = x_ref[...]                     # (TILE, d)
+    words = words_ref[...]             # (T, I) uint32
+    lref = lref_ref[...]               # (T, L) int32
+    leaf_values = leaf_ref[...]        # (V,)
+    thr_table = thr_ref[...]           # (NT,)
+    thr_offsets = off_ref[...]         # (F+1,)
+    used_features = feat_ref[...]      # (F,)
+    base = base_ref[...]               # (C,)
+
+    T, I = words.shape
+    C = n_ensembles
+    n_fu = used_features.shape[0]
+    tmask = jnp.uint32((1 << tidx_bits) - 1)
+
+    def tree_body(t, acc):
+        row = jax.lax.dynamic_slice_in_dim(words, t, 1, axis=0)[0]  # (I,)
+        idx = jnp.zeros((TILE,), jnp.int32)
+        for _ in range(max_depth):
+            word = row[idx]
+            ref = (word >> tidx_bits).astype(jnp.int32)
+            tix = (word & tmask).astype(jnp.int32)
+            split = ref < n_fu
+            safe = jnp.minimum(ref, n_fu - 1)
+            fidx = used_features[safe]                       # (TILE,)
+            xv = jnp.take_along_axis(x, fidx[:, None], axis=1)[:, 0]
+            thr = thr_table[thr_offsets[safe] + tix]
+            go_left = jnp.where(split, xv <= thr, True)
+            idx = 2 * idx + jnp.where(go_left, 1, 2)
+        leaf_row = jax.lax.dynamic_slice_in_dim(lref, t, 1, axis=0)[0]
+        v = leaf_values[leaf_row[idx - I]]                   # (TILE,)
+        cls = t % C
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (1, C), 1) == cls).astype(
+            jnp.float32
+        )
+        return acc + v[:, None] * onehot
+
+    acc = jnp.zeros((TILE, C), jnp.float32) + base[None, :]
+    acc = jax.lax.fori_loop(0, T, tree_body, acc)
+    out_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_depth", "tidx_bits", "n_ensembles", "interpret"),
+)
+def packed_predict(
+    x,
+    words,
+    leaf_ref,
+    leaf_values,
+    thr_table,
+    thr_offsets,
+    used_features,
+    base_score,
+    *,
+    max_depth: int,
+    tidx_bits: int,
+    n_ensembles: int,
+    interpret: bool = True,
+):
+    """(n, d) raw floats -> (n, C) ensemble scores from the packed model."""
+    n, d = x.shape
+    n_pad = -n % TILE
+    if n_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+    n_tiles = (n + n_pad) // TILE
+    C = n_ensembles
+
+    whole = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            max_depth=max_depth,
+            tidx_bits=tidx_bits,
+            n_ensembles=n_ensembles,
+        ),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((TILE, d), lambda i: (i, 0)),
+            whole(words.shape),
+            whole(leaf_ref.shape),
+            whole(leaf_values.shape),
+            whole(thr_table.shape),
+            whole(thr_offsets.shape),
+            whole(used_features.shape),
+            whole(base_score.shape),
+        ],
+        out_specs=pl.BlockSpec((TILE, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, C), jnp.float32),
+        interpret=interpret,
+    )(
+        x.astype(jnp.float32),
+        words.astype(jnp.uint32),
+        leaf_ref.astype(jnp.int32),
+        leaf_values.astype(jnp.float32),
+        thr_table.astype(jnp.float32),
+        thr_offsets.astype(jnp.int32),
+        used_features.astype(jnp.int32),
+        base_score.astype(jnp.float32),
+    )
+    return out[:n]

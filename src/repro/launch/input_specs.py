@@ -1,0 +1,104 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every (arch × shape) cell.
+
+Shapes (assignment):
+  train_4k     seq 4096,   global batch 256  (training step)
+  prefill_32k  seq 32768,  global batch 32   (inference prefill)
+  decode_32k   seq 32768,  global batch 128  (one token, 32k KV cache)
+  long_500k    seq 524288, global batch 1    (one token, 500k state) —
+               SSM/hybrid only; full-attention archs are recorded as SKIP.
+
+Modality stubs per the assignment: whisper gets precomputed frame
+embeddings (seq//2), llava gets patch embeddings (seq//4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.base import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+SUBQUADRATIC = {"rwkv", "hybrid"}  # families that run long_500k
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> str | None:
+    if shape == "long_500k" and cfg.family not in SUBQUADRATIC:
+        return "full-attention arch: 500k decode excluded per assignment rule"
+    return None
+
+
+def _dp(mesh, batch: int):
+    """Batch-sharding axes, dropping axes the batch can't cover (B=1)."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    size = 1
+    dp = []
+    for a in axes:
+        if batch % (size * mesh.shape[a]) == 0:
+            dp.append(a)
+            size *= mesh.shape[a]
+    return tuple(dp) if dp else None
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, mesh, shape_name: str):
+    """(batch ShapeDtypeStruct tree, batch PartitionSpec tree, dp axes)."""
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    dp = _dp(mesh, B)
+    D = cfg.d_model
+    if cfg.family == "encdec":
+        se = S // cfg.frontend_len_div
+        batch = {
+            "frames": sds((B, se, D), jnp.bfloat16),
+            "tokens": sds((B, S), jnp.int32),
+            "labels": sds((B, S), jnp.int32),
+        }
+        spec = {"frames": P(dp, None, None), "tokens": P(dp, None), "labels": P(dp, None)}
+    elif cfg.family == "vlm":
+        pe = S // cfg.frontend_len_div
+        batch = {
+            "embeds": sds((B, pe, D), jnp.bfloat16),
+            "tokens": sds((B, S - pe), jnp.int32),
+            "labels": sds((B, S), jnp.int32),
+        }
+        spec = {"embeds": P(dp, None, None), "tokens": P(dp, None), "labels": P(dp, None)}
+    else:
+        batch = {"tokens": sds((B, S), jnp.int32), "labels": sds((B, S), jnp.int32)}
+        spec = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if info["kind"] != "train":
+        batch.pop("labels")
+        spec.pop("labels")
+    return batch, spec, dp
+
+
+def decode_specs(model, mesh, shape_name: str):
+    """(cache shapes, cache specs, token/pos shapes+specs, dp)."""
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    dp = _dp(mesh, B)
+    cfg = model.cfg
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_seq"] = S // cfg.frontend_len_div
+    shapes, specs = model.abstract_cache(B, S, **kw)
+
+    def fix_dp(spec):
+        # abstract_cache templates use 'data'; rewrite to the actual dp axes
+        parts = tuple(dp if p == "data" else p for p in spec)
+        return P(*parts)
+
+    specs = jax.tree.map(fix_dp, specs, is_leaf=lambda x: isinstance(x, P))
+    token = sds((B,), jnp.int32)
+    pos = sds((), jnp.int32)
+    return shapes, specs, token, P(dp), pos, dp

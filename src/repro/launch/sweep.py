@@ -1,0 +1,81 @@
+"""Run every dry-run cell as an isolated subprocess (resumable).
+
+    PYTHONPATH=src python -m repro.launch.sweep --results results/
+
+Order: single-pod cells first (they feed the roofline), then multi-pod,
+then the toad_gbdt cells.  Existing JSONs are skipped, so the sweep can be
+re-run after fixes and only failed/missing cells recompute.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+SHAPE_NAMES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def cells():
+    from repro.configs import list_archs
+
+    for mesh in ("single", "multi"):
+        for arch in list_archs():
+            for shape in SHAPE_NAMES:
+                yield arch, shape, mesh
+        yield "toad_gbdt", "default", mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--timeout", type=int, default=1500)
+    ap.add_argument("--only-mesh", default=None)
+    args = ap.parse_args()
+    os.makedirs(args.results, exist_ok=True)
+
+    for arch, shape, mesh in cells():
+        if args.only_mesh and mesh != args.only_mesh:
+            continue
+        out = os.path.join(
+            args.results, f"dryrun_{arch}_{shape}_{mesh}.json".replace("/", "_")
+        )
+        if os.path.exists(out):
+            try:
+                status = json.load(open(out)).get("status")
+                if status in ("OK", "SKIP"):
+                    print(f"[skip-existing] {out} ({status})", flush=True)
+                    continue
+            except Exception:
+                pass
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--mesh", mesh, "--out", out,
+        ]
+        t0 = time.time()
+        print(f"[run] {arch} {shape} {mesh}", flush=True)
+        try:
+            p = subprocess.run(
+                cmd, capture_output=True, text=True, timeout=args.timeout,
+                env={**os.environ, "PYTHONPATH": "src"},
+            )
+            status = "OK" if p.returncode == 0 else "FAIL"
+            if p.returncode != 0 and not os.path.exists(out):
+                with open(out, "w") as f:
+                    json.dump(
+                        {"status": "FAIL", "arch": arch, "shape": shape,
+                         "mesh": mesh, "error": (p.stderr or "")[-2000:]}, f, indent=2,
+                    )
+        except subprocess.TimeoutExpired:
+            status = "TIMEOUT"
+            with open(out, "w") as f:
+                json.dump({"status": "FAIL", "arch": arch, "shape": shape,
+                           "mesh": mesh, "error": "compile timeout"}, f, indent=2)
+        print(f"[done] {arch} {shape} {mesh}: {status} ({time.time()-t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

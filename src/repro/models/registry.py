@@ -1,0 +1,34 @@
+"""Uniform model interface over the four family implementations."""
+
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+from repro.models import rglru, rwkv6, transformer, whisper
+from repro.models.base import ModelConfig
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "rwkv": rwkv6,
+    "hybrid": rglru,
+    "encdec": whisper,
+}
+
+
+def get_model(cfg: ModelConfig) -> SimpleNamespace:
+    mod = _FAMILY[cfg.family]
+    return SimpleNamespace(
+        cfg=cfg,
+        module=mod,
+        init=lambda key: mod.init(cfg, key),
+        abstract_init=lambda: mod.abstract_init(cfg),
+        param_specs=lambda: mod.param_specs(cfg),
+        train_loss=lambda params, batch, dp=("data",): mod.train_loss(cfg, params, batch, dp),
+        prefill=lambda params, batch, dp=("data",): mod.prefill(cfg, params, batch, dp),
+        decode_step=lambda mesh, params, cache, token, pos, dp=("data",): mod.decode_step(
+            cfg, mesh, params, cache, token, pos, dp
+        ),
+        abstract_cache=lambda batch, max_seq, **kw: mod.abstract_cache(cfg, batch, max_seq, **kw),
+    )

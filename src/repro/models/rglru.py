@@ -1,0 +1,377 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local MQA
+attention in a repeating (rglru, rglru, attn) pattern (arXiv:2402.19427).
+
+RG-LRU: ``h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)`` with
+``a_t = exp(-c · softplus(Λ) ⊙ r_t)`` — a data-gated diagonal recurrence,
+parallelized over sequence with ``lax.associative_scan`` (O(log S) depth).
+Local attention uses a 2048-token window, so per-chip state is O(window)
+and the arch runs the long_500k cell.
+
+The 38-layer config doesn't divide the 3-pattern, so the stack is declared
+as segments: 12 × (rglru, rglru, attn) + 1 × (rglru, rglru).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as Lyr
+from repro.models.base import ModelConfig, constrain
+from repro.models.transformer import (
+    _ce_loss,
+    _logits,
+    _materialize,
+    _qkv,
+)
+
+CONV_WIDTH = 4
+LRU_C = 8.0
+
+
+def segments(cfg: ModelConfig):
+    """[(pattern tuple, n_repeats)] covering cfg.n_layers."""
+    pat = cfg.pattern or ("rglru", "rglru", "attn")
+    full, rem = divmod(cfg.n_layers, len(pat))
+    segs = [(pat, full)]
+    if rem:
+        segs.append((pat[:rem], 1))
+    return segs
+
+
+def _d_rnn(cfg):
+    return cfg.d_rnn or cfg.d_model
+
+
+def _entries(cfg: ModelConfig, kind: str):
+    D, F = cfg.d_model, cfg.d_ff
+    R = _d_rnn(cfg)
+    e = {
+        "ln1": ((D,), ("ones", None)),
+        "ln2": ((D,), ("ones", None)),
+        "wi": ((D, F), ("dense", ("data", "model"))),
+        "wg": ((D, F), ("dense", ("data", "model"))),
+        "wod": ((F, D), ("dense", ("model", "data"))),
+    }
+    if kind == "rglru":
+        e.update(
+            {
+                "w_a": ((D, R), ("dense", ("data", "model"))),   # gelu branch
+                "w_b": ((D, R), ("dense", ("data", "model"))),   # recurrent branch
+                "w_out": ((R, D), ("dense", ("model", "data"))),
+                "conv": ((CONV_WIDTH, R), ("zeros", (None, "model"))),
+                "lam": ((R,), ("ones", ("model",))),             # Λ
+                "gate_r": ((R,), ("zeros", ("model",))),         # diag recurrence gate
+                "gate_i": ((R,), ("zeros", ("model",))),         # diag input gate
+            }
+        )
+    else:  # local MQA attention
+        KVp, Gp = cfg.padded_heads
+        Hp = KVp * Gp
+        dh = cfg.head_dim
+        e.update(
+            {
+                "wq": ((D, Hp * dh), ("dense", ("data", "model"))),
+                "wk": ((D, KVp * dh), ("dense", ("data", None))),
+                "wv": ((D, KVp * dh), ("dense", ("data", None))),
+                "wo": ((Hp * dh, D), ("dense", ("model", "data"))),
+            }
+        )
+    return e
+
+
+def _top_entries(cfg: ModelConfig):
+    D, Vp = cfg.d_model, cfg.padded_vocab
+    return {
+        "embed": ((Vp, D), ("dense", ("model", "data"))),
+        "ln_f": ((D,), ("ones", None)),
+        "head": ((D, Vp), ("dense", ("data", "model"))),
+    }
+
+
+def abstract_init(cfg: ModelConfig):
+    top_p, top_s = _materialize(_top_entries(cfg), None)
+    seg_p, seg_s = [], []
+    for pat, reps in segments(cfg):
+        pos_p, pos_s = [], []
+        for kind in pat:
+            p, s = _materialize(_entries(cfg, kind), None)
+            pos_p.append(
+                jax.tree.map(lambda x: jax.ShapeDtypeStruct((reps,) + x.shape, x.dtype), p)
+            )
+            pos_s.append(jax.tree.map(lambda sp: P(None, *sp), s))
+        seg_p.append(pos_p)
+        seg_s.append(pos_s)
+    return {"top": top_p, "segments": seg_p}, {"top": top_s, "segments": seg_s}
+
+
+def init(cfg: ModelConfig, key):
+    key, kt = jax.random.split(key)
+    top_p, _ = _materialize(_top_entries(cfg), kt)
+    seg_p = []
+    for pat, reps in segments(cfg):
+        pos_p = []
+        for kind in pat:
+            per = []
+            for _ in range(reps):
+                key, sub = jax.random.split(key)
+                per.append(_materialize(_entries(cfg, kind), sub)[0])
+            pos_p.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+        seg_p.append(pos_p)
+    return {"top": top_p, "segments": seg_p}
+
+
+def param_specs(cfg: ModelConfig):
+    return abstract_init(cfg)[1]
+
+
+# --------------------------------------------------------------------------
+# RG-LRU temporal mixing
+# --------------------------------------------------------------------------
+
+
+def _causal_conv(x, kernel, state=None):
+    """Depthwise causal conv, width 4.  x: (B, S, R); kernel: (W, R);
+    state: (B, W-1, R) trailing inputs from the previous segment."""
+    W = kernel.shape[0]
+    pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype) if state is None else state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * kernel[i][None, None, :].astype(x.dtype)
+        for i in range(W)
+    )
+    return out, xp[:, -(W - 1) :]
+
+
+def _rglru_scan(x, a, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan.  x here is the gated
+    input term; a the decay.  h0: (B, R) carried state."""
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        x = jnp.concatenate([h0[:, None, :], x], axis=1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return (h[:, 1:], h[:, -1]) if h0 is not None else (h, h[:, -1])
+
+
+def _rglru_block(cfg, lp, h, conv_state=None, lru_state=None):
+    """h: (B, S, D) normed input -> (out (B,S,D), conv_state, lru_state)."""
+    bf = h.dtype
+    a_br = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", h, lp["w_a"].astype(bf)))
+    b = jnp.einsum("bsd,dr->bsr", h, lp["w_b"].astype(bf))
+    b, conv_state = _causal_conv(b, lp["conv"], conv_state)
+    bf32 = b.astype(jnp.float32)
+    r = jax.nn.sigmoid(bf32 * lp["gate_r"] )
+    i = jax.nn.sigmoid(bf32 * lp["gate_i"])
+    log_a = -LRU_C * jax.nn.softplus(lp["lam"]) * r          # (B,S,R) fp32, <0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a**2, 1e-9)) * (i * bf32)
+    hseq, lru_state = _rglru_scan(gated, a, lru_state)
+    out = (hseq.astype(bf) * a_br)
+    return jnp.einsum("bsr,rd->bsd", out, lp["w_out"].astype(bf)), conv_state, lru_state
+
+
+def _attn_block_full(cfg, lp, h, positions, head_mask):
+    B, S, D = h.shape
+    q, k, v = _qkv(cfg, lp, h, positions)
+    o = Lyr.attention_full(
+        q, k, v, head_mask,
+        group_size=cfg.padded_heads[1],
+        causal=True, window=cfg.local_window, q_chunk=cfg.q_chunk,
+    )
+    return jnp.einsum("bsx,xd->bsd", o.reshape(B, S, -1), lp["wo"].astype(h.dtype)), (k, v)
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward
+# --------------------------------------------------------------------------
+
+
+def _forward(cfg: ModelConfig, params, x, positions, collect=False):
+    head_mask = cfg.head_mask().reshape(-1)
+    caches = []
+    for (pat, reps), seg_params in zip(segments(cfg), params["segments"]):
+
+        def body(x, lps, _pat=pat):
+            outs = []
+            for kind, lp in zip(_pat, lps):
+                h = Lyr.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                if kind == "rglru":
+                    o, cs, ls = _rglru_block(cfg, lp, h)
+                    outs.append((cs, ls))
+                else:
+                    o, kv = _attn_block_full(cfg, lp, h, positions, head_mask)
+                    outs.append(kv)
+                x = x + o
+                h2 = Lyr.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                x = x + Lyr.swiglu(h2, lp["wi"], lp["wg"], lp["wod"])
+            return x, tuple(outs)
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, outs = jax.lax.scan(fn, x, tuple(seg_params), unroll=cfg.scan_unroll)
+        caches.append(outs if collect else None)
+    return x, caches
+
+
+def train_loss(cfg: ModelConfig, params, batch, dp=("data",)):
+    tokens = batch["tokens"]
+    x = params["top"]["embed"].astype(jnp.bfloat16)[tokens]
+    x = constrain(x, P(dp, None, None))
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x, _ = _forward(cfg, params, x, positions)
+    x = Lyr.rmsnorm(x, params["top"]["ln_f"], cfg.norm_eps)
+    logits = _logits(cfg, params["top"], x)
+    return _ce_loss(cfg, logits, batch["labels"])
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + O(window) decode
+# --------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params, batch, dp=("data",)):
+    """Returns (last logits, cache).  Attention caches keep only the last
+    `window` keys/values (ring buffer, index = pos % window)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    W = cfg.local_window
+    x = params["top"]["embed"].astype(jnp.bfloat16)[tokens]
+    x = constrain(x, P(dp, None, None))
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, caches = _forward(cfg, params, x, positions, collect=True)
+
+    cache = {"length": jnp.asarray(S, jnp.int32), "segments": []}
+    for (pat, reps), outs in zip(segments(cfg), caches):
+        seg_cache = []
+        for kind, out in zip(pat, outs):
+            if kind == "rglru":
+                cs, ls = out  # (reps, B, W-1, R), (reps, B, R)
+                seg_cache.append({"conv": cs, "lru": ls})
+            else:
+                k, v = out  # (reps, B, S, KVp, dh)
+                if S >= W:
+                    # last W positions land at ring slots (pos % W)
+                    k_r = jnp.roll(k[:, :, -W:], shift=(S % W), axis=2)
+                    v_r = jnp.roll(v[:, :, -W:], shift=(S % W), axis=2)
+                else:
+                    k_r = jnp.pad(k, ((0, 0), (0, 0), (0, W - S), (0, 0), (0, 0)))
+                    v_r = jnp.pad(v, ((0, 0), (0, 0), (0, W - S), (0, 0), (0, 0)))
+                seg_cache.append({"k": k_r, "v": v_r})
+        cache["segments"].append(seg_cache)
+    x_last = Lyr.rmsnorm(x[:, -1:], params["top"]["ln_f"], cfg.norm_eps)
+    logits = _logits(cfg, params["top"], x_last)[:, 0]
+    return logits, cache
+
+
+def _attn_decode(cfg, lp, h, kc, vc, pos, head_mask):
+    """Windowed ring-buffer decode attention (cache is small: W tokens)."""
+    B, _, D = h.shape
+    KVp, Gp = cfg.padded_heads
+    dh = cfg.head_dim
+    W = kc.shape[1]
+    q, k, v = _qkv(cfg, lp, h, pos[None])
+    slot = pos % W
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+    # absolute position of ring slot j given we just wrote at `slot`
+    j = jnp.arange(W)
+    age = (slot - j) % W                     # 0 = newest
+    kpos = pos - age
+    valid = (kpos >= 0) & (kpos > pos - W)
+    ke = jnp.repeat(kc, Gp, axis=2)
+    ve = jnp.repeat(vc, Gp, axis=2)
+    s = jnp.einsum("bhd,bthd->bht", q[:, 0].astype(jnp.float32) * dh**-0.5, ke.astype(jnp.float32))
+    s = jnp.where(valid[None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bht,bthd->bhd", p, ve.astype(jnp.float32)).astype(h.dtype)
+    o = o * head_mask[None, :, None].astype(h.dtype)
+    return jnp.einsum("bx,xd->bd", o.reshape(B, -1), lp["wo"].astype(h.dtype)), kc, vc
+
+
+def decode_step(cfg: ModelConfig, mesh, params, cache, token, pos, dp=("data",)):
+    head_mask = cfg.head_mask().reshape(-1)
+    x = params["top"]["embed"].astype(jnp.bfloat16)[token][:, None, :]  # (B,1,D)
+
+    new_segments = []
+    for (pat, reps), seg_params, seg_cache in zip(
+        segments(cfg), params["segments"], cache["segments"]
+    ):
+
+        def body(x, xs, _pat=pat):
+            lps = xs[: len(_pat)]
+            caches_in = xs[len(_pat) :]
+            outs = []
+            for kind, lp, c in zip(_pat, lps, caches_in):
+                h = Lyr.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                if kind == "rglru":
+                    o, cs, ls = _rglru_block(cfg, lp, h, c["conv"], c["lru"])
+                    outs.append({"conv": cs, "lru": ls})
+                    o = o[:, 0]
+                else:
+                    o, kc, vc = _attn_decode(cfg, lp, h, c["k"], c["v"], pos, head_mask)
+                    outs.append({"k": kc, "v": vc})
+                x = x + o[:, None, :] if o.ndim == 2 else x + o
+                h2 = Lyr.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                x = x + Lyr.swiglu(h2, lp["wi"], lp["wg"], lp["wod"])
+            return x, tuple(outs)
+
+        xs = tuple(seg_params) + tuple(seg_cache)
+        x, outs = jax.lax.scan(body, x, xs)
+        new_segments.append(list(outs))
+
+    x = Lyr.rmsnorm(x, params["top"]["ln_f"], cfg.norm_eps)
+    logits = _logits(cfg, params["top"], x)[:, 0]
+    return logits, {"length": cache["length"] + 1, "segments": new_segments}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Cache shapes/specs: O(window + d_rnn), independent of max_seq — the
+    point of the hybrid for the long_500k cell."""
+    R = _d_rnn(cfg)
+    W = cfg.local_window
+    KVp, _ = cfg.padded_heads
+    dh = cfg.head_dim
+    sds = jax.ShapeDtypeStruct
+    shapes, specs = {"length": sds((), jnp.int32), "segments": []}, {
+        "length": P(),
+        "segments": [],
+    }
+    for pat, reps in segments(cfg):
+        sc, ss = [], []
+        for kind in pat:
+            if kind == "rglru":
+                sc.append(
+                    {
+                        "conv": sds((reps, batch, CONV_WIDTH - 1, R), jnp.bfloat16),
+                        "lru": sds((reps, batch, R), jnp.float32),
+                    }
+                )
+                ss.append(
+                    {
+                        "conv": P(None, "data", None, "model"),
+                        "lru": P(None, "data", "model"),
+                    }
+                )
+            else:
+                sc.append(
+                    {
+                        "k": sds((reps, batch, W, KVp, dh), jnp.bfloat16),
+                        "v": sds((reps, batch, W, KVp, dh), jnp.bfloat16),
+                    }
+                )
+                ss.append(
+                    {
+                        "k": P(None, "data", None, None, None),
+                        "v": P(None, "data", None, None, None),
+                    }
+                )
+        shapes["segments"].append(sc)
+        specs["segments"].append(ss)
+    return shapes, specs

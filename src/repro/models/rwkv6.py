@@ -1,0 +1,325 @@
+"""RWKV-6 "Finch": attention-free linear RNN with data-dependent decay.
+
+Key mechanism (arXiv:2404.05892): per-head matrix state
+``S_t = diag(w_t) S_{t-1} + k_t v_t^T`` where the decay ``w_t`` is a
+*data-dependent* low-rank function of the input, plus the bonus ``u`` term:
+``y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)``.
+
+Training runs a two-level scan (outer chunks rematerialized, inner steps)
+so activation memory is O(S/chunk) states; decode carries the O(1) state —
+which is why this arch *does* run the long_500k cell.
+
+Layout: projections are TP-sharded over `model` on the feature dim; the
+head dim of the state is sharded over `model` (D/dh heads, divisible).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.base import ModelConfig, constrain, make_remat, wcast
+
+W_LORA = 64
+CHUNK = 64
+
+
+def _layer_entries(cfg: ModelConfig):
+    D = cfg.d_model
+    F = cfg.d_ff
+    H = D // cfg.head_dim
+    dh = cfg.head_dim
+    return {
+        "ln1": ((D,), ("ones", None)),
+        "ln2": ((D,), ("ones", None)),
+        # token-shift mixing coefficients for r,k,v,w,g and channel-mix
+        "mu_r": ((D,), ("zeros", None)),
+        "mu_k": ((D,), ("zeros", None)),
+        "mu_v": ((D,), ("zeros", None)),
+        "mu_w": ((D,), ("zeros", None)),
+        "mu_g": ((D,), ("zeros", None)),
+        "mu_c": ((D,), ("zeros", None)),
+        "w_r": ((D, D), ("dense", ("data", "model"))),
+        "w_k": ((D, D), ("dense", ("data", "model"))),
+        "w_v": ((D, D), ("dense", ("data", "model"))),
+        "w_g": ((D, D), ("dense", ("data", "model"))),
+        "w_o": ((D, D), ("dense", ("model", "data"))),
+        # data-dependent decay lora: w = exp(-exp(w0 + tanh(z A) B))
+        "w0": ((D,), ("zeros", ("model",))),
+        "w_A": ((D, W_LORA), ("dense", ("data", None))),
+        "w_B": ((W_LORA, D), ("dense", (None, "model"))),
+        "u": ((H, dh), ("zeros", ("model", None))),
+        "ln_x": ((D,), ("ones", None)),
+        "ln_x_b": ((D,), ("zeros", None)),
+        # channel mix
+        "wc_k": ((D, F), ("dense", ("data", "model"))),
+        "wc_v": ((F, D), ("dense", ("model", "data"))),
+        "wc_r": ((D, D), ("dense", ("data", "model"))),
+    }
+
+
+def _top_entries(cfg: ModelConfig):
+    D, Vp = cfg.d_model, cfg.padded_vocab
+    return {
+        "embed": ((Vp, D), ("dense", ("model", "data"))),
+        "ln_f": ((D,), ("ones", None)),
+        "head": ((D, Vp), ("dense", ("data", "model"))),
+    }
+
+
+def abstract_init(cfg: ModelConfig):
+    from repro.models.transformer import _materialize
+
+    top_p, top_s = _materialize(_top_entries(cfg), None)
+    p, s = _materialize(_layer_entries(cfg), None)
+    lp = jax.tree.map(lambda x: jax.ShapeDtypeStruct((cfg.n_layers,) + x.shape, x.dtype), p)
+    ls = jax.tree.map(lambda sp: P(None, *sp), s)
+    return {"top": top_p, "layers": lp}, {"top": top_s, "layers": ls}
+
+
+def init(cfg: ModelConfig, key):
+    from repro.models.transformer import _materialize
+
+    key, kt = jax.random.split(key)
+    top_p, _ = _materialize(_top_entries(cfg), kt)
+    per = []
+    for _ in range(cfg.n_layers):
+        key, sub = jax.random.split(key)
+        per.append(_materialize(_layer_entries(cfg), sub)[0])
+    return {"top": top_p, "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *per)}
+
+
+def param_specs(cfg: ModelConfig):
+    return abstract_init(cfg)[1]
+
+
+# --------------------------------------------------------------------------
+# the WKV6 recurrence
+# --------------------------------------------------------------------------
+
+
+def _wkv_step(state, rkvw, u):
+    """state: (B, H, dh, dh) fp32; r/k/v (bf16 stream) / w (fp32 decay)."""
+    r_t, k_t, v_t, w_t = rkvw
+    r_t = r_t.astype(jnp.float32)
+    k_t = k_t.astype(jnp.float32)
+    v_t = v_t.astype(jnp.float32)
+    kv = k_t[..., :, None] * v_t[..., None, :]            # (B,H,dh,dh)
+    att = state + u[None, :, :, None] * kv
+    y = jnp.sum(att * r_t[..., :, None], axis=-2)          # (B,H,dh)
+    state = w_t[..., :, None] * state + kv
+    return state, y
+
+
+def wkv(r, k, v, w, u, state, chunk=CHUNK):
+    """r,k,v,w: (B, S, H, dh); state: (B, H, dh, dh) fp32 -> (y, state).
+
+    Outer scan over chunks (rematerialized) + inner scan over steps: the
+    autodiff-saved residuals are one state per chunk, not per step.
+    """
+    B, S, H, dh = r.shape
+    chunk = min(chunk, S)
+    s_pad = -S % chunk
+    if s_pad:
+        r = jnp.pad(r, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, s_pad), (0, 0), (0, 0)), constant_values=1.0)
+    Sp = S + s_pad
+    nc = Sp // chunk
+
+    # Pin the head sharding through the chunk transpose and the scan: left
+    # unconstrained, GSPMD replicated the (nc, chunk, B, H, dh) fp32 scan
+    # operands over `model` — 232 GB/device of all-gather (§Perf rwkv#1).
+    U = P.UNCONSTRAINED
+    xs_spec = P(U, U, U, "model", U)
+    st_spec = P(U, "model", U, U)
+    state = constrain(state, st_spec)
+
+    def to_chunks(x):  # (B, Sp, H, dh) -> (nc, chunk, B, H, dh)
+        out = x.reshape(B, nc, chunk, H, dh).transpose(1, 2, 0, 3, 4)
+        return constrain(out, xs_spec)
+
+    # r/k/v stream through the scan in bf16 (upcast per step, fp32 math);
+    # only the decay w needs fp32 end to end (§Perf rwkv#4)
+    xs = tuple(
+        to_chunks(x.astype(dt))
+        for x, dt in ((r, jnp.bfloat16), (k, jnp.bfloat16), (v, jnp.bfloat16),
+                      (w, jnp.float32))
+    )
+
+    @jax.checkpoint
+    def chunk_fn(state, xs_c):
+        state = constrain(state, st_spec)
+        state, ys = jax.lax.scan(lambda s, t: _wkv_step(s, t, u), state, xs_c)
+        return constrain(state, st_spec), ys
+
+    state, ys = jax.lax.scan(chunk_fn, state, xs)          # ys: (nc, chunk, B, H, dh)
+    y = ys.transpose(2, 0, 1, 3, 4).reshape(B, Sp, H, dh)[:, :S]
+    return y, state
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1} (zeros or `prev` carry at t=0)."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _head_groupnorm(y, scale, bias, eps=1e-5):
+    """GroupNorm with one group per head over (B, S, H, dh)."""
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    B, S, H, dh = y.shape
+    yn = yn.reshape(B, S, H * dh)
+    return (yn * scale + bias).astype(y.dtype)
+
+
+def _time_mix(cfg, lp, x, state, x_prev):
+    """x: (B, S, D).  Returns (out, new_state, last_x)."""
+    B, S, D = x.shape
+    H, dh = D // cfg.head_dim, cfg.head_dim
+    xx = _shift(x, x_prev)
+    bf = x.dtype
+    r = jnp.einsum("bsd,de->bse", _mix(x, xx, lp["mu_r"]), wcast(lp["w_r"], bf, P(None, "model")))
+    k = jnp.einsum("bsd,de->bse", _mix(x, xx, lp["mu_k"]), wcast(lp["w_k"], bf, P(None, "model")))
+    v = jnp.einsum("bsd,de->bse", _mix(x, xx, lp["mu_v"]), wcast(lp["w_v"], bf, P(None, "model")))
+    g = jax.nn.silu(
+        jnp.einsum("bsd,de->bse", _mix(x, xx, lp["mu_g"]), wcast(lp["w_g"], bf, P(None, "model")))
+    )
+    zw = _mix(x, xx, lp["mu_w"])
+    w_lora = jnp.einsum(
+        "bsl,ld->bsd", jnp.tanh(jnp.einsum("bsd,dl->bsl", zw, lp["w_A"].astype(bf))),
+        lp["w_B"].astype(bf),
+    )
+    w = jnp.exp(-jnp.exp(jnp.clip(lp["w0"].astype(jnp.float32) + w_lora.astype(jnp.float32), -8.0, 4.0)))
+
+    hs = lambda t: t.reshape(B, S, H, dh)
+    y, state = wkv(hs(r), hs(k), hs(v), hs(w), lp["u"].astype(jnp.float32), state)
+    y = _head_groupnorm(y, lp["ln_x"], lp["ln_x_b"]).astype(bf) * g
+    out = jnp.einsum("bsd,de->bse", y, wcast(lp["w_o"], bf, P("model", None)))
+    return out, state, x[:, -1]
+
+
+def _channel_mix(cfg, lp, x, x_prev):
+    xx = _shift(x, x_prev)
+    bf = x.dtype
+    z = _mix(x, xx, lp["mu_c"])
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", z, wcast(lp["wc_k"], bf, P(None, "model")))))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", z, wcast(lp["wc_r"], bf, P(None, "model"))))
+    return rr * jnp.einsum("bsf,fd->bsd", kk, wcast(lp["wc_v"], bf, P("model", None))), x[:, -1]
+
+
+def _block(cfg, x, lp, state, xp_t, xp_c):
+    from repro.models.layers import rmsnorm
+
+    # Pin the normed stream replicated-on-D: otherwise GSPMD computes the
+    # norm/shift/mix chain D-sharded and all-gathers each of the five mixed
+    # streams separately in front of its projection matmul — 5 full
+    # (B,S,D) gathers per block per pass (§Perf rwkv#2).
+    U = P.UNCONSTRAINED
+    rep = P(U, U, None)
+    h = constrain(rmsnorm(x, lp["ln1"], cfg.norm_eps), rep)
+    o, state, last_t = _time_mix(cfg, lp, h, state, xp_t)
+    x = x + o
+    h2 = constrain(rmsnorm(x, lp["ln2"], cfg.norm_eps), rep)
+    o2, last_c = _channel_mix(cfg, lp, h2, xp_c)
+    return x + o2, state, last_t, last_c
+
+
+def _stack(cfg, params, x, states=None, collect=False, dp=("data",)):
+    B, S, D = x.shape
+    H, dh = D // cfg.head_dim, cfg.head_dim
+    L = cfg.n_layers
+    if states is None:
+        states = {
+            "s": jnp.zeros((L, B, H, dh, dh), jnp.float32),
+            "xt": jnp.zeros((L, B, D), x.dtype),
+            "xc": jnp.zeros((L, B, D), x.dtype),
+        }
+
+    def body(x, xs):
+        lp, s0, xt0, xc0 = xs
+        x, s1, xt1, xc1 = _block(cfg, x, lp, s0, xt0, xc0)
+        return x, (s1, xt1, xc1)
+
+    body_fn = make_remat(cfg, body)
+    x, (s, xt, xc) = jax.lax.scan(
+        body_fn, x, (params["layers"], states["s"], states["xt"], states["xc"]),
+        unroll=cfg.scan_unroll,
+    )
+    new_states = {"s": s, "xt": xt, "xc": xc}
+    return x, new_states
+
+
+def train_loss(cfg: ModelConfig, params, batch, dp=("data",)):
+    from repro.models.transformer import _ce_loss, _logits
+
+    tokens = batch["tokens"]
+    x = params["top"]["embed"].astype(jnp.bfloat16)[tokens]
+    x = constrain(x, P(dp, None, None))
+    x, _ = _stack(cfg, params, x, dp=dp)
+    from repro.models.layers import rmsnorm
+
+    x = rmsnorm(x, params["top"]["ln_f"], cfg.norm_eps)
+    logits = _logits(cfg, params["top"], x)
+    return _ce_loss(cfg, logits, batch["labels"])
+
+
+def prefill(cfg: ModelConfig, params, batch, dp=("data",)):
+    from repro.models.layers import rmsnorm
+    from repro.models.transformer import _logits
+
+    tokens = batch["tokens"]
+    x = params["top"]["embed"].astype(jnp.bfloat16)[tokens]
+    x = constrain(x, P(dp, None, None))
+    x, states = _stack(cfg, params, x, dp=dp)
+    x = rmsnorm(x, params["top"]["ln_f"], cfg.norm_eps)
+    logits = _logits(cfg, params["top"], x[:, -1:, :])[:, 0]
+    return logits, {**states, "length": jnp.asarray(tokens.shape[1], jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, mesh, params, cache, token, pos, dp=("data",)):
+    """O(1) per-token step; the 'KV cache' is the (L, B, H, dh, dh) state."""
+    from repro.models.layers import rmsnorm
+    from repro.models.transformer import _logits
+
+    x = params["top"]["embed"].astype(jnp.bfloat16)[token][:, None, :]  # (B,1,D)
+
+    def body(x, xs):
+        lp, s0, xt0, xc0 = xs
+        x, s1, xt1, xc1 = _block(cfg, x, lp, s0, xt0, xc0)
+        return x, (s1, xt1, xc1)
+
+    x, (s, xt, xc) = jax.lax.scan(
+        body, x, (params["layers"], cache["s"], cache["xt"], cache["xc"])
+    )
+    x = rmsnorm(x, params["top"]["ln_f"], cfg.norm_eps)
+    logits = _logits(cfg, params["top"], x)[:, 0]
+    return logits, {"s": s, "xt": xt, "xc": xc, "length": cache["length"] + 1}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    D = cfg.d_model
+    H, dh = D // cfg.head_dim, cfg.head_dim
+    L = cfg.n_layers
+    sds = jax.ShapeDtypeStruct
+    shapes = {
+        "s": sds((L, batch, H, dh, dh), jnp.float32),
+        "xt": sds((L, batch, D), jnp.bfloat16),
+        "xc": sds((L, batch, D), jnp.bfloat16),
+        "length": sds((), jnp.int32),
+    }
+    specs = {
+        "s": P(None, "data", "model", None, None),
+        "xt": P(None, "data", "model"),
+        "xc": P(None, "data", "model"),
+        "length": P(),
+    }
+    return shapes, specs

@@ -1,0 +1,368 @@
+"""Decoder-only LM stack: dense GQA, MoE, and VLM (embeds-input) families.
+
+One parameter-tree definition drives four entry points:
+
+  * ``abstract_init(cfg)``  -> (ShapeDtypeStruct tree, PartitionSpec tree) —
+    no allocation; the 512-device dry-run lowers against this.
+  * ``init(cfg, rng)``      -> real fp32 params (reduced configs/smoke tests).
+  * ``train_loss``          -> next-token CE over the scanned, remat'd stack.
+  * ``prefill`` / ``decode_step`` -> serving path; decode uses the
+    sequence-sharded KV cache (flash-decode, layers.flash_decode).
+
+Layers are stacked along a leading axis and executed with ``lax.scan`` so
+the HLO (and 512-device compile time) is O(1) in depth.  For interleaved
+MoE (llama4-style), the scan iterates over repeating groups whose members
+have heterogeneous trees (dense vs MoE) — one sub-stack per group position.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import layers as Lyr
+from repro.models.base import ModelConfig, constrain, dp_spec, make_remat, wcast
+
+
+# --------------------------------------------------------------------------
+# parameter tree
+# --------------------------------------------------------------------------
+
+
+def _layer_entries(cfg: ModelConfig, moe_layer: bool):
+    """{name: (shape, (init_kind, spec))} for one block."""
+    D, dh = cfg.d_model, cfg.head_dim
+    KVp, Gp = cfg.padded_heads
+    Hp = KVp * Gp
+    F = cfg.d_ff
+    e = {
+        "ln1": ((D,), ("ones", None)),
+        "ln2": ((D,), ("ones", None)),
+        "wq": ((D, Hp * dh), ("dense", ("data", "model"))),
+        "wk": ((D, KVp * dh), ("dense", ("data", None))),
+        "wv": ((D, KVp * dh), ("dense", ("data", None))),
+        "wo": ((Hp * dh, D), ("dense", ("model", "data"))),
+    }
+    if cfg.norm == "layernorm":
+        e["ln1_b"] = ((D,), ("zeros", None))
+        e["ln2_b"] = ((D,), ("zeros", None))
+    if cfg.qkv_bias:
+        e["bq"] = ((Hp * dh,), ("zeros", ("model",)))
+        e["bk"] = ((KVp * dh,), ("zeros", None))
+        e["bv"] = ((KVp * dh,), ("zeros", None))
+    if cfg.qk_norm:
+        e["q_norm"] = ((dh,), ("ones", None))
+        e["k_norm"] = ((dh,), ("ones", None))
+    if moe_layer:
+        E = cfg.n_experts
+        e["router"] = ((D, E), ("dense", ("data", None)))
+        e["w_in"] = ((E, D, F), ("dense", ("model", "data", None)))
+        e["w_gate"] = ((E, D, F), ("dense", ("model", "data", None)))
+        e["w_out"] = ((E, F, D), ("dense", ("model", None, "data")))
+    else:
+        e["wi"] = ((D, F), ("dense", ("data", "model")))
+        e["wg"] = ((D, F), ("dense", ("data", "model")))
+        e["wod"] = ((F, D), ("dense", ("model", "data")))
+    return e
+
+
+def _top_entries(cfg: ModelConfig):
+    D, Vp = cfg.d_model, cfg.padded_vocab
+    e = {
+        "embed": ((Vp, D), ("dense", ("model", "data"))),
+        "ln_f": ((D,), ("ones", None)),
+    }
+    if cfg.norm == "layernorm":
+        e["ln_f_b"] = ((D,), ("zeros", None))
+    if not cfg.tie_embeddings:
+        e["head"] = ((D, Vp), ("dense", ("data", "model")))
+    return e
+
+
+def _group_flags(cfg: ModelConfig):
+    """MoE flag per position within the repeating layer group."""
+    group = cfg.moe_interleave if (cfg.family == "moe" and cfg.n_experts) else 1
+    if cfg.family != "moe" or cfg.n_experts == 0:
+        return [False] * group
+    return [(i % cfg.moe_interleave) == (cfg.moe_interleave - 1) for i in range(group)]
+
+
+def _materialize(entries, key=None):
+    params, specs = {}, {}
+    for name, (shape, (kind, spec)) in entries.items():
+        spec_t = spec if isinstance(spec, tuple) else ((spec,) if spec else ())
+        specs[name] = P(*spec_t)
+        if key is None:
+            params[name] = jax.ShapeDtypeStruct(shape, jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            if kind == "dense":
+                fan_in = shape[0] if len(shape) == 1 else shape[-2]
+                params[name] = jax.random.normal(sub, shape, jnp.float32) * fan_in**-0.5
+            elif kind == "ones":
+                params[name] = jnp.ones(shape, jnp.float32)
+            else:
+                params[name] = jnp.zeros(shape, jnp.float32)
+    return params, specs
+
+
+def abstract_init(cfg: ModelConfig):
+    flags = _group_flags(cfg)
+    group = len(flags)
+    assert cfg.n_layers % group == 0, (cfg.n_layers, group)
+    n_groups = cfg.n_layers // group
+    top_p, top_s = _materialize(_top_entries(cfg), None)
+    gps, gss = [], []
+    for f in flags:
+        p, s = _materialize(_layer_entries(cfg, f), None)
+        gps.append(
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct((n_groups,) + x.shape, x.dtype), p)
+        )
+        gss.append(jax.tree.map(lambda sp: P(None, *sp), s))
+    return {"top": top_p, "groups": gps}, {"top": top_s, "groups": gss}
+
+
+def init(cfg: ModelConfig, key):
+    flags = _group_flags(cfg)
+    group = len(flags)
+    n_groups = cfg.n_layers // group
+    key, k_top = jax.random.split(key)
+    top_p, _ = _materialize(_top_entries(cfg), k_top)
+    gps = []
+    for f in flags:
+        per_layer = []
+        for _ in range(n_groups):
+            key, sub = jax.random.split(key)
+            per_layer.append(_materialize(_layer_entries(cfg, f), sub)[0])
+        gps.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer))
+    return {"top": top_p, "groups": gps}
+
+
+def param_specs(cfg: ModelConfig):
+    return abstract_init(cfg)[1]
+
+
+# --------------------------------------------------------------------------
+# forward blocks
+# --------------------------------------------------------------------------
+
+
+def _norm(cfg, x, lp, prefix):
+    if cfg.norm == "layernorm":
+        return Lyr.layernorm(x, lp[prefix], lp[prefix + "_b"], cfg.norm_eps)
+    return Lyr.rmsnorm(x, lp[prefix], cfg.norm_eps)
+
+
+def _final_norm(cfg, x, top):
+    if cfg.norm == "layernorm":
+        return Lyr.layernorm(x, top["ln_f"], top["ln_f_b"], cfg.norm_eps)
+    return Lyr.rmsnorm(x, top["ln_f"], cfg.norm_eps)
+
+
+def _qkv(cfg: ModelConfig, lp, h, positions):
+    """h: (B, S, D) -> q (B,S,Hp,dh), k/v (B,S,KVp,dh); qk-norm + rope."""
+    KVp, Gp = cfg.padded_heads
+    Hp = KVp * Gp
+    dh = cfg.head_dim
+    B, S, _ = h.shape
+    q = jnp.einsum("bsd,dx->bsx", h, wcast(lp["wq"], h.dtype, P(None, "model")))
+    k = jnp.einsum("bsd,dx->bsx", h, wcast(lp["wk"], h.dtype, P(None, None)))
+    v = jnp.einsum("bsd,dx->bsx", h, wcast(lp["wv"], h.dtype, P(None, None)))
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(h.dtype)
+        k = k + lp["bk"].astype(h.dtype)
+        v = v + lp["bv"].astype(h.dtype)
+    q = q.reshape(B, S, Hp, dh)
+    k = k.reshape(B, S, KVp, dh)
+    v = v.reshape(B, S, KVp, dh)
+    if cfg.qk_norm:
+        q = Lyr.rmsnorm(q, lp["q_norm"], cfg.norm_eps)
+        k = Lyr.rmsnorm(k, lp["k_norm"], cfg.norm_eps)
+    q = Lyr.rope(q, positions, cfg.rope_theta)
+    k = Lyr.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mlp(cfg: ModelConfig, lp, h, moe_layer: bool):
+    if moe_layer:
+        return Lyr.moe_block(
+            h, lp["router"], lp["w_in"], lp["w_gate"], lp["w_out"],
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+        )
+    return Lyr.swiglu(h, lp["wi"], lp["wg"], lp["wod"])
+
+
+def _block_full(cfg: ModelConfig, head_mask, moe_layer, x, lp, positions):
+    """Full-sequence block.  Returns (x, (k, v)) — k/v feed the prefill cache."""
+    B, S, D = x.shape
+    h = _norm(cfg, x, lp, "ln1")
+    q, k, v = _qkv(cfg, lp, h, positions)
+    o = Lyr.attention_full(
+        q, k, v, head_mask,
+        group_size=cfg.padded_heads[1],
+        causal=True,
+        window=cfg.local_window,
+        q_chunk=cfg.q_chunk,
+    )
+    o = jnp.einsum("bsx,xd->bsd", o.reshape(B, S, -1), wcast(lp["wo"], x.dtype, P("model", None)))
+    x = x + o
+    h2 = _norm(cfg, x, lp, "ln2")
+    x = x + _mlp(cfg, lp, h2, moe_layer)
+    return x, (k, v)
+
+
+def _stack_full(cfg: ModelConfig, params, x, positions, collect_kv: bool):
+    """scan the layer stack over a full sequence."""
+    flags = _group_flags(cfg)
+    head_mask = cfg.head_mask().reshape(-1)
+
+    def body(x, lps):
+        kvs = []
+        for f, lp in zip(flags, lps):
+            x, kv = _block_full(cfg, head_mask, f, x, lp, positions)
+            kvs.append(kv if collect_kv else None)
+        return x, tuple(kvs)
+
+    body = make_remat(cfg, body)
+    x, kvs = jax.lax.scan(body, x, tuple(params["groups"]), unroll=cfg.scan_unroll)
+    return x, kvs
+
+
+# --------------------------------------------------------------------------
+# public model functions
+# --------------------------------------------------------------------------
+
+
+def _embed_tokens(cfg, top, tokens):
+    return top["embed"].astype(jnp.bfloat16)[tokens]
+
+
+def _logits(cfg, top, x):
+    head = top["embed"].T if cfg.tie_embeddings else top["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype)).astype(jnp.float32)
+    return logits + cfg.vocab_mask()[None, None, :]
+
+
+def _ce_loss(cfg, logits, labels):
+    """Mean CE over labels >= 0 (VLM/audio prefix positions carry -1)."""
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(mask, logz - ll, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def train_loss(cfg: ModelConfig, params, batch, dp=("data",)):
+    """batch: tokens (B,S) int32, labels (B,S) int32; VLM adds embeds
+    (B,P,D) bf16 prepended to the token embeddings."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params["top"], tokens)
+    if cfg.family == "vlm" and "embeds" in batch:
+        x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
+    x = constrain(x, P(dp, None, None))
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, _ = _stack_full(cfg, params, x, positions, collect_kv=False)
+    x = _final_norm(cfg, x, params["top"])
+    logits = _logits(cfg, params["top"], x)
+    return _ce_loss(cfg, logits, batch["labels"])
+
+
+def prefill(cfg: ModelConfig, params, batch, dp=("data",)):
+    """Prompt (B,S) -> (last-token logits, KV cache sharded over model/seq)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params["top"], tokens)
+    if cfg.family == "vlm" and "embeds" in batch:
+        x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
+    x = constrain(x, P(dp, None, None))
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, kvs = _stack_full(cfg, params, x, positions, collect_kv=True)
+    x = _final_norm(cfg, x, params["top"])
+    logits = _logits(cfg, params["top"], x[:, -1:, :])[:, 0]
+    cache = []
+    for k, v in kvs:  # each (n_groups, B, S, KVp, dh)
+        entry = {}
+        if cfg.kv_cache_dtype == "int8":
+            k, ks = Lyr.quantize_kv(k)
+            v, vs = Lyr.quantize_kv(v)
+            entry["ks"] = constrain(ks, P(None, dp, "model", None))
+            entry["vs"] = constrain(vs, P(None, dp, "model", None))
+        entry["k"] = constrain(k, P(None, dp, "model", None, None))
+        entry["v"] = constrain(v, P(None, dp, "model", None, None))
+        cache.append(entry)
+    return logits, {"layers": cache, "length": jnp.asarray(S, jnp.int32)}
+
+
+def _block_decode(cfg: ModelConfig, mesh, dp, head_mask, moe_layer, x, lp, kv, pos):
+    """Single-token block.  x: (B, D).  Returns (x, updated kv dict)."""
+    B, D = x.shape
+    h = _norm(cfg, x[:, None, :], lp, "ln1")
+    q, k, v = _qkv(cfg, lp, h, pos[None])
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]      # (B, Hp, dh), (B, KVp, dh)
+    if cfg.kv_cache_dtype == "int8":
+        o, kc, vc, ks, vs = Lyr.flash_decode(
+            mesh, dp, q, kv["k"], kv["v"], k, v, pos, head_mask,
+            cfg.padded_heads[1], k_scale=kv["ks"], v_scale=kv["vs"],
+        )
+        new_kv = {"k": kc, "v": vc, "ks": ks, "vs": vs}
+    else:
+        o, kc, vc = Lyr.flash_decode(
+            mesh, dp, q, kv["k"], kv["v"], k, v, pos, head_mask, cfg.padded_heads[1]
+        )
+        new_kv = {"k": kc, "v": vc}
+    x = x + jnp.einsum("bx,xd->bd", o.reshape(B, -1), wcast(lp["wo"], x.dtype))
+    h2 = _norm(cfg, x[:, None, :], lp, "ln2")
+    x = x + _mlp(cfg, lp, h2, moe_layer)[:, 0]
+    return x, new_kv
+
+
+def decode_step(cfg: ModelConfig, mesh, params, cache, token, pos, dp=("data",)):
+    """One serving step: token (B,) int32, pos () int32 -> (logits (B, Vp),
+    updated cache).  Cache layout per group member: k/v (n_groups, B, Smax,
+    KVp, dh) sharded P(None, dp, 'model', None, None)."""
+    flags = _group_flags(cfg)
+    head_mask = cfg.head_mask().reshape(-1)
+    x = params["top"]["embed"].astype(jnp.bfloat16)[token]      # (B, D)
+
+    def body(x, xs):
+        lps = xs[: len(flags)]
+        kvs = xs[len(flags) :]
+        new_kvs = []
+        for f, lp, kv in zip(flags, lps, kvs):
+            x, new_kv = _block_decode(cfg, mesh, dp, head_mask, f, x, lp, kv, pos)
+            new_kvs.append(new_kv)
+        return x, tuple(new_kvs)
+
+    xs = tuple(params["groups"]) + tuple(cache["layers"])
+    x, new_cache = jax.lax.scan(body, x, xs, unroll=cfg.scan_unroll)
+    x = _final_norm(cfg, x[:, None, :], params["top"])
+    logits = _logits(cfg, params["top"], x)[:, 0]
+    return logits, {"layers": list(new_cache), "length": cache["length"] + 1}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """(shape tree, spec tree) for the decode cache."""
+    flags = _group_flags(cfg)
+    n_groups = cfg.n_layers // len(flags)
+    KVp, _ = cfg.padded_heads
+    dtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+    kshape = jax.ShapeDtypeStruct(
+        (n_groups, batch, max_seq, KVp, cfg.head_dim), dtype
+    )
+    kspec = P(None, "data", "model", None, None)
+    entry = {"k": kshape, "v": kshape}
+    espec = {"k": kspec, "v": kspec}
+    if cfg.kv_cache_dtype == "int8":
+        sshape = jax.ShapeDtypeStruct((n_groups, batch, max_seq, KVp), jnp.float32)
+        sspec = P(None, "data", "model", None)
+        entry = {**entry, "ks": sshape, "vs": sshape}
+        espec = {**espec, "ks": sspec, "vs": sspec}
+    layers = [dict(entry) for _ in flags]
+    specs = [dict(espec) for _ in flags]
+    return (
+        {"layers": layers, "length": jax.ShapeDtypeStruct((), jnp.int32)},
+        {"layers": specs, "length": P()},
+    )

@@ -1,0 +1,299 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings (B, S_enc, D).  The backbone is
+faithful in flavor: LayerNorm, GELU MLPs with biases, sinusoidal absolute
+positions, bidirectional encoder self-attention, causal decoder
+self-attention + cross-attention.
+
+Serving: decoder self-attention uses the sequence-sharded flash-decode
+cache; cross-attention K/V are precomputed at prefill and also sharded
+over `model` along the encoder sequence (read-only flash attention).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as Lyr
+from repro.models.base import ModelConfig, constrain
+from repro.models.transformer import _ce_loss, _materialize
+
+
+def _sinusoid(S, D):
+    pos = np.arange(S)[:, None]
+    dim = np.arange(D // 2)[None, :]
+    ang = pos / (10000 ** (2 * dim / D))
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=1), jnp.float32
+    )
+
+
+def _attn_entries(cfg, prefix=""):
+    D, dh = cfg.d_model, cfg.head_dim
+    KVp, Gp = cfg.padded_heads
+    Hp = KVp * Gp
+    return {
+        prefix + "wq": ((D, Hp * dh), ("dense", ("data", "model"))),
+        prefix + "bq": ((Hp * dh,), ("zeros", ("model",))),
+        prefix + "wk": ((D, KVp * dh), ("dense", ("data", None))),
+        prefix + "wv": ((D, KVp * dh), ("dense", ("data", None))),
+        prefix + "bv": ((KVp * dh,), ("zeros", None)),
+        prefix + "wo": ((Hp * dh, D), ("dense", ("model", "data"))),
+        prefix + "bo": ((D,), ("zeros", None)),
+    }
+
+
+def _mlp_entries(cfg):
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "wi": ((D, F), ("dense", ("data", "model"))),
+        "bi": ((F,), ("zeros", ("model",))),
+        "wod": ((F, D), ("dense", ("model", "data"))),
+        "bo2": ((D,), ("zeros", None)),
+    }
+
+
+def _enc_layer(cfg):
+    D = cfg.d_model
+    e = {"ln1": ((D,), ("ones", None)), "ln1_b": ((D,), ("zeros", None)),
+         "ln2": ((D,), ("ones", None)), "ln2_b": ((D,), ("zeros", None))}
+    e.update(_attn_entries(cfg))
+    e.update(_mlp_entries(cfg))
+    return e
+
+
+def _dec_layer(cfg):
+    D = cfg.d_model
+    e = {
+        "ln1": ((D,), ("ones", None)), "ln1_b": ((D,), ("zeros", None)),
+        "lnx": ((D,), ("ones", None)), "lnx_b": ((D,), ("zeros", None)),
+        "ln2": ((D,), ("ones", None)), "ln2_b": ((D,), ("zeros", None)),
+    }
+    e.update(_attn_entries(cfg))
+    e.update(_attn_entries(cfg, "x_"))
+    e.update(_mlp_entries(cfg))
+    return e
+
+
+def _top_entries(cfg):
+    D, Vp = cfg.d_model, cfg.padded_vocab
+    return {
+        "embed": ((Vp, D), ("dense", ("model", "data"))),
+        "ln_enc": ((D,), ("ones", None)), "ln_enc_b": ((D,), ("zeros", None)),
+        "ln_dec": ((D,), ("ones", None)), "ln_dec_b": ((D,), ("zeros", None)),
+    }
+
+
+def _stacked(entries_fn, cfg, n, key):
+    if key is None:
+        p, s = _materialize(entries_fn(cfg), None)
+        p = jax.tree.map(lambda x: jax.ShapeDtypeStruct((n,) + x.shape, x.dtype), p)
+        s = jax.tree.map(lambda sp: P(None, *sp), s)
+        return p, s
+    per = []
+    for _ in range(n):
+        key, sub = jax.random.split(key)
+        per.append(_materialize(entries_fn(cfg), sub)[0])
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per), None
+
+
+def abstract_init(cfg: ModelConfig):
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    top_p, top_s = _materialize(_top_entries(cfg), None)
+    ep, es = _stacked(_enc_layer, cfg, n_enc, None)
+    dp_, ds = _stacked(_dec_layer, cfg, cfg.n_layers, None)
+    return (
+        {"top": top_p, "enc": ep, "dec": dp_},
+        {"top": top_s, "enc": es, "dec": ds},
+    )
+
+
+def init(cfg: ModelConfig, key):
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    k1, k2, k3 = jax.random.split(key, 3)
+    top_p, _ = _materialize(_top_entries(cfg), k1)
+    ep, _ = _stacked(_enc_layer, cfg, n_enc, k2)
+    dp_, _ = _stacked(_dec_layer, cfg, cfg.n_layers, k3)
+    return {"top": top_p, "enc": ep, "dec": dp_}
+
+
+def param_specs(cfg: ModelConfig):
+    return abstract_init(cfg)[1]
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+
+def _proj_qkv(cfg, lp, hq, hkv, prefix=""):
+    KVp, Gp = cfg.padded_heads
+    Hp = KVp * Gp
+    dh = cfg.head_dim
+    B, Sq, _ = hq.shape
+    Skv = hkv.shape[1]
+    q = jnp.einsum("bsd,dx->bsx", hq, lp[prefix + "wq"].astype(hq.dtype)) + lp[
+        prefix + "bq"
+    ].astype(hq.dtype)
+    k = jnp.einsum("bsd,dx->bsx", hkv, lp[prefix + "wk"].astype(hq.dtype))
+    v = jnp.einsum("bsd,dx->bsx", hkv, lp[prefix + "wv"].astype(hq.dtype)) + lp[
+        prefix + "bv"
+    ].astype(hq.dtype)
+    return (
+        q.reshape(B, Sq, Hp, dh),
+        k.reshape(B, Skv, KVp, dh),
+        v.reshape(B, Skv, KVp, dh),
+    )
+
+
+def _attn_full(cfg, lp, hq, hkv, head_mask, causal, prefix=""):
+    B, Sq, _ = hq.shape
+    q, k, v = _proj_qkv(cfg, lp, hq, hkv, prefix)
+    o = Lyr.attention_full(
+        q, k, v, head_mask, group_size=cfg.padded_heads[1],
+        causal=causal, q_chunk=cfg.q_chunk,
+    )
+    return (
+        jnp.einsum("bsx,xd->bsd", o.reshape(B, Sq, -1), lp[prefix + "wo"].astype(hq.dtype))
+        + lp[prefix + "bo"].astype(hq.dtype),
+        (k, v),
+    )
+
+
+def _mlp(lp, h):
+    return Lyr.gelu_mlp(h, lp["wi"], lp["bi"], lp["wod"], lp["bo2"])
+
+
+def _encode(cfg, params, frames, dp):
+    """frames: (B, S_enc, D) stub embeddings -> encoder states."""
+    x = frames.astype(jnp.bfloat16)
+    x = x + _sinusoid(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    x = constrain(x, P(dp, None, None))
+    head_mask = cfg.head_mask().reshape(-1)
+
+    def body(x, lp):
+        h = Lyr.layernorm(x, lp["ln1"], lp["ln1_b"], cfg.norm_eps)
+        o, _ = _attn_full(cfg, lp, h, h, head_mask, causal=False)
+        x = x + o
+        h2 = Lyr.layernorm(x, lp["ln2"], lp["ln2_b"], cfg.norm_eps)
+        return x + _mlp(lp, h2), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc"], unroll=cfg.scan_unroll)
+    return Lyr.layernorm(x, params["top"]["ln_enc"], params["top"]["ln_enc_b"], cfg.norm_eps)
+
+
+def _decode_full(cfg, params, tokens, enc, dp, collect=False):
+    x = params["top"]["embed"].astype(jnp.bfloat16)[tokens]
+    x = x + _sinusoid(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    x = constrain(x, P(dp, None, None))
+    head_mask = cfg.head_mask().reshape(-1)
+
+    def body(x, lp):
+        h = Lyr.layernorm(x, lp["ln1"], lp["ln1_b"], cfg.norm_eps)
+        o, kv = _attn_full(cfg, lp, h, h, head_mask, causal=True)
+        x = x + o
+        hx = Lyr.layernorm(x, lp["lnx"], lp["lnx_b"], cfg.norm_eps)
+        ox, xkv = _attn_full(cfg, lp, hx, enc, head_mask, causal=False, prefix="x_")
+        x = x + ox
+        h2 = Lyr.layernorm(x, lp["ln2"], lp["ln2_b"], cfg.norm_eps)
+        x = x + _mlp(lp, h2)
+        return x, (kv, xkv) if collect else None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, kvs = jax.lax.scan(fn, x, params["dec"], unroll=cfg.scan_unroll)
+    x = Lyr.layernorm(x, params["top"]["ln_dec"], params["top"]["ln_dec_b"], cfg.norm_eps)
+    return x, kvs
+
+
+def _logits(cfg, top, x):
+    logits = jnp.einsum(
+        "bsd,vd->bsv", x, top["embed"].astype(x.dtype)
+    ).astype(jnp.float32)
+    return logits + cfg.vocab_mask()[None, None, :]
+
+
+def train_loss(cfg: ModelConfig, params, batch, dp=("data",)):
+    """batch: frames (B, S_enc, D), tokens (B, S_dec), labels (B, S_dec)."""
+    enc = _encode(cfg, params, batch["frames"], dp)
+    x, _ = _decode_full(cfg, params, batch["tokens"], enc, dp)
+    return _ce_loss(cfg, _logits(cfg, params["top"], x), batch["labels"])
+
+
+def prefill(cfg: ModelConfig, params, batch, dp=("data",)):
+    enc = _encode(cfg, params, batch["frames"], dp)
+    x, kvs = _decode_full(cfg, params, batch["tokens"], enc, dp, collect=True)
+    (k, v), (xk, xv) = kvs
+    cache = {
+        "k": constrain(k, P(None, dp, "model", None, None)),
+        "v": constrain(v, P(None, dp, "model", None, None)),
+        "xk": constrain(xk, P(None, dp, "model", None, None)),
+        "xv": constrain(xv, P(None, dp, "model", None, None)),
+        "length": jnp.asarray(batch["tokens"].shape[1], jnp.int32),
+    }
+    return _logits(cfg, params["top"], x[:, -1:])[:, 0], cache
+
+
+def decode_step(cfg: ModelConfig, mesh, params, cache, token, pos, dp=("data",)):
+    head_mask = cfg.head_mask().reshape(-1)
+    KVp, Gp = cfg.padded_heads
+    dh = cfg.head_dim
+    D = cfg.d_model
+    x = params["top"]["embed"].astype(jnp.bfloat16)[token]  # (B, D)
+    x = x + _sin_at(pos, cfg.d_model).astype(x.dtype)
+    B = x.shape[0]
+
+    def body(x, xs):
+        lp, kc, vc, xk, xv = xs
+        h = Lyr.layernorm(x[:, None], lp["ln1"], lp["ln1_b"], cfg.norm_eps)
+        q, k, v = _proj_qkv(cfg, lp, h, h)
+        o, kc, vc = Lyr.flash_decode(
+            mesh, dp, q[:, 0], kc, vc, k[:, 0], v[:, 0], pos, head_mask, Gp
+        )
+        x = x + jnp.einsum("bx,xd->bd", o.reshape(B, -1), lp["wo"].astype(x.dtype)) + lp["bo"].astype(x.dtype)
+        # cross attention over the precomputed (read-only) encoder K/V
+        hx = Lyr.layernorm(x[:, None], lp["lnx"], lp["lnx_b"], cfg.norm_eps)
+        qx = (
+            jnp.einsum("bsd,dx->bsx", hx, lp["x_wq"].astype(x.dtype))
+            + lp["x_bq"].astype(x.dtype)
+        ).reshape(B, -1, dh)
+        ox, _, _ = Lyr.flash_decode(
+            mesh, dp, qx, xk, xv,
+            jnp.zeros_like(xk[:, 0]), jnp.zeros_like(xv[:, 0]),
+            jnp.asarray(xk.shape[1] - 1, jnp.int32),  # attend to all; no write
+            head_mask, Gp, write=False,
+        )
+        x = x + jnp.einsum("bx,xd->bd", ox.reshape(B, -1), lp["x_wo"].astype(x.dtype)) + lp["x_bo"].astype(x.dtype)
+        h2 = Lyr.layernorm(x[:, None], lp["ln2"], lp["ln2_b"], cfg.norm_eps)
+        x = x + _mlp(lp, h2)[:, 0]
+        return x, (kc, vc)
+
+    xs = (params["dec"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    x, (kc, vc) = jax.lax.scan(body, x, xs)
+    x = Lyr.layernorm(x[:, None], params["top"]["ln_dec"], params["top"]["ln_dec_b"], cfg.norm_eps)
+    logits = _logits(cfg, params["top"], x)[:, 0]
+    return logits, {**cache, "k": kc, "v": vc, "length": cache["length"] + 1}
+
+
+def _sin_at(pos, D):
+    dim = jnp.arange(D // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / (10000 ** (2 * dim / D))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int, enc_seq: int):
+    KVp, _ = cfg.padded_heads
+    dh = cfg.head_dim
+    L = cfg.n_layers
+    sds = jax.ShapeDtypeStruct
+    kshape = sds((L, batch, max_seq, KVp, dh), jnp.bfloat16)
+    xshape = sds((L, batch, enc_seq, KVp, dh), jnp.bfloat16)
+    spec = P(None, "data", "model", None, None)
+    return (
+        {"k": kshape, "v": kshape, "xk": xshape, "xv": xshape, "length": sds((), jnp.int32)},
+        {"k": spec, "v": spec, "xk": spec, "xv": spec, "length": P()},
+    )

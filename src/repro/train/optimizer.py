@@ -1,0 +1,135 @@
+"""Optimizers (no optax in the container): AdamW and factored Adafactor.
+
+Both are pure pytree transforms whose states inherit the parameter
+shardings (the dry-run attaches the same PartitionSpec tree), giving
+ZeRO-style sharded optimizer state for free.
+
+Adafactor stores row/column second-moment factors for rank>=2 weights —
+O(sum of dims) instead of O(prod of dims) — which is what lets the 400B
+MoE config hold optimizer state in HBM at 256 chips (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple]  # (grads, state, params, step)
+    state_specs: Callable[..., Any]  # (param specs, param shapes) -> state specs
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p
+            return p - lr * u, m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    def state_specs(param_specs, param_shapes=None):
+        return {"m": param_specs, "v": param_specs}
+
+    return Optimizer(init, update, state_specs)
+
+
+def adafactor(lr=3e-4, eps=1e-30, decay=0.8, clip=1.0) -> Optimizer:
+    """Factored second moments for rank>=2 leaves; full for vectors."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t**-decay
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :] + eps)
+                news = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / (jnp.sqrt(v) + eps)
+                news = {"v": v}
+            norm = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, norm / clip)
+            return p - lr * u, news
+
+        # state has one extra nesting level per param leaf; align via treedef
+        leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+        leaves_p = treedef.flatten_up_to(params)
+        leaves_s = treedef.flatten_up_to(state)
+        out = [upd(g, s, p) for g, s, p in zip(leaves_g, leaves_s, leaves_p)]
+        new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_state = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        return new_params, new_state
+
+    def state_specs(param_specs, param_shapes=None):
+        """Factoring must follow the *rank* of the parameter (init's rule),
+        not the spec length — PartitionSpec omits trailing replicated dims."""
+        if param_shapes is None:
+            raise ValueError("adafactor.state_specs needs param shapes")
+
+        leaves_s, treedef = jax.tree_util.tree_flatten(
+            param_specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        leaves_p = treedef.flatten_up_to(param_shapes)
+        out = []
+        for spec, p in zip(leaves_s, leaves_p):
+            rank = len(p.shape)
+            padded = tuple(spec) + (None,) * (rank - len(spec))
+            if rank >= 2:
+                out.append(
+                    {"vr": P(*padded[:-1]), "vc": P(*(padded[:-2] + padded[-1:]))}
+                )
+            else:
+                out.append({"v": P(*padded)})
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return Optimizer(init, update, state_specs)
+
+
+def get_optimizer(name: str, lr: float = 3e-4) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr)
+    if name == "adafactor":
+        return adafactor(lr=lr)
+    raise ValueError(name)

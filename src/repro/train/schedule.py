@@ -1,0 +1,13 @@
+"""LR schedules (pure functions of the step scalar)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak=3e-4, warmup=1000, total=100_000, floor=0.1):
+    s = step.astype(jnp.float32)
+    warm = peak * s / max(warmup, 1)
+    frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,51 @@
+"""Property tests for the bit-level writer/reader."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitio import BitReader, BitWriter, bits_for
+
+
+@given(st.lists(st.tuples(st.integers(0, 2**32 - 1), st.integers(1, 32)), max_size=100))
+@settings(max_examples=50, deadline=None)
+def test_roundtrip_fields(fields):
+    fields = [(v & ((1 << w) - 1), w) for v, w in fields]
+    w = BitWriter()
+    for v, width in fields:
+        w.write(v, width)
+    assert w.n_bits == sum(width for _, width in fields)
+    r = BitReader(w.getvalue(), w.n_bits)
+    for v, width in fields:
+        assert r.read(width) == v
+    assert r.remaining == 0
+
+
+@given(st.lists(st.floats(width=32, allow_nan=False), max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_roundtrip_f32(values):
+    w = BitWriter()
+    for v in values:
+        w.write_f32(v)
+    r = BitReader(w.getvalue(), w.n_bits)
+    for v in values:
+        assert r.read_f32() == np.float32(v)
+
+
+def test_bits_for():
+    assert bits_for(0) == 1
+    assert bits_for(1) == 1
+    assert bits_for(2) == 1
+    assert bits_for(3) == 2
+    assert bits_for(4) == 2
+    assert bits_for(5) == 3
+    assert bits_for(256) == 8
+    assert bits_for(257) == 9
+
+
+def test_value_too_wide():
+    w = BitWriter()
+    try:
+        w.write(4, 2)
+        raise AssertionError("should have raised")
+    except ValueError:
+        pass

@@ -1,0 +1,38 @@
+"""Shared-codebook weight quantization (beyond-paper extension)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codebook import dequantize, quantize, quantized_bytes
+
+
+def test_roundtrip_error_shrinks_with_bits():
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 64)) * 0.02
+    errs = []
+    for bits in (2, 4, 8):
+        cb, idx = quantize(w, bits=bits)
+        wd = dequantize(cb, idx, jnp.float32)
+        errs.append(float(jnp.sqrt(jnp.mean((wd - w) ** 2))))
+        assert idx.shape == w.shape
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 1e-3  # 8-bit codebook is near-lossless for gaussians
+
+
+def test_size_accounting():
+    assert quantized_bytes((1024, 1024), 4) == 1024 * 1024 / 2 + 16 * 4
+    # 4-bit vs f32: ~8x
+    ratio = (1024 * 1024 * 4) / quantized_bytes((1024, 1024), 4)
+    assert 7.9 < ratio < 8.01
+
+
+def test_functional_quality_on_matmul():
+    """Quantized weights preserve a matmul's output within tolerance."""
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (128, 128)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 128))
+    cb, idx = quantize(w, bits=6)
+    y0 = x @ w
+    y1 = x @ dequantize(cb, idx, jnp.float32)
+    rel = float(jnp.linalg.norm(y1 - y0) / jnp.linalg.norm(y0))
+    assert rel < 0.05

@@ -1,0 +1,59 @@
+"""Data pipeline invariants."""
+
+import numpy as np
+
+from repro.data.pipeline import batch_indices, kfold, shard_rows, split_dataset
+from repro.data.synth import REGISTRY, load
+
+
+def test_all_datasets_have_declared_shapes():
+    meta = {
+        "covtype_binary": (54, "binary"),
+        "covtype_multi": (54, "multiclass"),
+        "california_housing": (8, "regression"),
+        "kin8nm": (8, "regression"),
+        "mushroom": (22, "binary"),
+        "wine_quality": (11, "multiclass"),
+        "kr_vs_kp": (36, "binary"),
+        "breast_cancer": (30, "binary"),
+    }
+    for name, (d, task) in meta.items():
+        ds = load(name, seed=0, n=500 if name != "breast_cancer" else None)
+        assert ds.d == d, name
+        assert ds.task == task, name
+        assert np.isfinite(ds.x).all()
+        if task == "multiclass":
+            assert ds.n_classes == 7
+            assert set(np.unique(ds.y)) <= set(range(7))
+
+
+def test_split_deterministic_and_disjoint():
+    ds = load("kin8nm", seed=0, n=1000)
+    s1 = split_dataset(ds, seed=3)
+    s2 = split_dataset(ds, seed=3)
+    np.testing.assert_array_equal(s1.x_train, s2.x_train)
+    assert len(s1.x_train) + len(s1.x_val) + len(s1.x_test) == ds.n
+    # edges fit on train only
+    assert s1.edges.shape[0] == ds.d
+
+
+def test_kfold_partitions():
+    ds = load("breast_cancer", seed=0)
+    folds = list(kfold(ds, k=5, seed=1))
+    assert len(folds) == 5
+    all_val = np.concatenate([v for _, v, _ in folds])
+    assert len(np.unique(all_val)) == len(all_val)
+
+
+def test_batch_indices_stateless():
+    a = batch_indices(seed=1, step=42, n=1000, batch=16)
+    b = batch_indices(seed=1, step=42, n=1000, batch=16)
+    c = batch_indices(seed=1, step=43, n=1000, batch=16)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_shard_rows_cover():
+    x = np.arange(10)[:, None]
+    parts = [shard_rows(x, 3, i) for i in range(3)]
+    np.testing.assert_array_equal(np.concatenate(parts), x)

@@ -1,0 +1,98 @@
+"""Per-kernel allclose vs the pure-jnp oracles, over shape/dtype sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.binning import binning
+from repro.kernels.histogram import histogram
+from repro.kernels.ops import predict_packed_model
+from repro.kernels.ref import binning_ref, histogram_ref, packed_predict_ref
+
+
+@pytest.mark.parametrize("n", [64, 513, 1024])
+@pytest.mark.parametrize("d", [1, 7])
+@pytest.mark.parametrize("n_bins", [16, 64, 256])
+@pytest.mark.parametrize("n_nodes", [1, 5, 9])
+def test_histogram_shapes(n, d, n_bins, n_nodes):
+    rng = np.random.default_rng(n * d + n_bins)
+    bins = jnp.asarray(rng.integers(0, n_bins, (n, d)), jnp.int32)
+    gh = jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, n_nodes, (n,)), jnp.int32)
+    out = histogram(bins, gh, pos, n_nodes=n_nodes, n_bins=n_bins)
+    ref = histogram_ref(bins, gh, pos, n_nodes, n_bins)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_histogram_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    bins = jnp.asarray(rng.integers(0, 32, (300, 4)), jnp.int32)
+    gh = jnp.asarray(rng.normal(size=(300, 2)).astype(dtype))
+    pos = jnp.zeros((300,), jnp.int32)
+    out = histogram(bins, gh, pos, n_nodes=1, n_bins=32)
+    ref = histogram_ref(bins, gh.astype(jnp.float32), pos, 1, 32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-2, atol=1e-2)
+
+
+@given(
+    n=st.integers(1, 700),
+    d=st.integers(1, 9),
+    e=st.integers(1, 40),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=12, deadline=None)
+def test_binning_property(n, d, e, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    edges = np.sort(rng.normal(size=(d, e)), axis=1).astype(np.float32)
+    if e > 3:
+        edges[:, -2:] = np.inf  # invalid candidates never count
+    out = binning(jnp.asarray(x), jnp.asarray(edges))
+    ref = binning_ref(jnp.asarray(x), jnp.asarray(edges))
+    assert bool(jnp.all(out == ref))
+
+
+def test_binning_boundary_semantics():
+    # bin = #{edges < x}: x exactly on an edge stays LEFT (x <= edge)
+    x = jnp.asarray([[1.0], [1.0 + 1e-6], [0.999999]])
+    edges = jnp.asarray([[1.0]])
+    out = binning(x, edges)
+    assert out.tolist() == [[0], [1], [0]]
+
+
+@pytest.mark.parametrize("task,n_classes,depth", [
+    ("regression", 0, 2), ("binary", 0, 4), ("multiclass", 3, 3),
+])
+def test_packed_predict_vs_forest(task, n_classes, depth):
+    from repro.core import decode, encode, to_packed
+    from repro.gbdt import GBDTConfig, apply_bins, fit_bins, predict_raw, train_jit
+
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(400, 6)).astype(np.float32)
+    if task == "regression":
+        y = X[:, 0] * 2 + np.sin(X[:, 1])
+    elif task == "binary":
+        y = (X[:, 0] > 0.2).astype(np.float32)
+    else:
+        y = np.digitize(X[:, 0], [-0.5, 0.5]).astype(np.float32)
+    edges = jnp.asarray(fit_bins(X, 16))
+    bins = apply_bins(jnp.asarray(X), edges)
+    cfg = GBDTConfig(task=task, n_classes=n_classes, n_rounds=10, max_depth=depth,
+                     toad_penalty_feature=1.0, toad_penalty_threshold=0.5)
+    forest, _, _ = train_jit(cfg, bins, jnp.asarray(y.astype(np.float32)), edges)
+    packed = to_packed(decode(encode(forest)))
+    out = predict_packed_model(packed, X)
+    ref = predict_raw(forest, jnp.asarray(X))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+    # kernel vs its own jnp oracle
+    oracle = packed_predict_ref(
+        jnp.asarray(X), jnp.asarray(packed.words), jnp.asarray(packed.leaf_ref),
+        jnp.asarray(packed.leaf_values), jnp.asarray(packed.thr_table),
+        jnp.asarray(packed.thr_offsets), jnp.asarray(packed.used_features),
+        jnp.asarray(packed.base_score),
+        max_depth=packed.max_depth, tidx_bits=packed.tidx_bits,
+        n_ensembles=packed.n_ensembles,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle), rtol=1e-6, atol=1e-6)

@@ -1,0 +1,69 @@
+"""End-to-end behaviour of the paper's system: train -> penalize ->
+encode -> deploy -> predict, plus the quality/memory trade-off claim."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression_summary, decode, encode, reuse_factor, to_packed
+from repro.data.pipeline import split_dataset
+from repro.data.synth import load
+from repro.gbdt import GBDTConfig, apply_bins, make_loss, predict_binned, train_jit
+from repro.kernels.ops import predict_packed_model
+
+
+def test_end_to_end_toad_pipeline():
+    """The full paper workflow on a synthetic covertype stand-in."""
+    ds = load("covtype_binary", seed=1, n=6000)
+    sp = split_dataset(ds, seed=1, n_bins=64)
+    edges = jnp.asarray(sp.edges)
+    bins_tr = apply_bins(jnp.asarray(sp.x_train), edges)
+    bins_te = apply_bins(jnp.asarray(sp.x_test), edges)
+    loss = make_loss(ds.task, ds.n_classes)
+
+    plain = GBDTConfig(task=ds.task, n_rounds=48, max_depth=3, learning_rate=0.15)
+    toad = GBDTConfig(task=ds.task, n_rounds=48, max_depth=3, learning_rate=0.15,
+                      toad_penalty_feature=4.0, toad_penalty_threshold=1.0)
+
+    f0, _, a0 = train_jit(plain, bins_tr, jnp.asarray(sp.y_train), edges)
+    f1, _, a1 = train_jit(toad, bins_tr, jnp.asarray(sp.y_train), edges)
+
+    m0 = float(loss.metric(jnp.asarray(sp.y_test), predict_binned(f0, bins_te)))
+    m1 = float(loss.metric(jnp.asarray(sp.y_test), predict_binned(f1, bins_te)))
+    # quality preserved within a small margin...
+    assert m1 > m0 - 0.03
+    # ...at a strictly smaller footprint
+    assert float(a1["toad_bytes"]) < float(a0["toad_bytes"])
+
+    # headline compression vs fp32 pointer baseline
+    s = compression_summary(f1)
+    assert s["compression_vs_f32"] >= 4.0, s
+    assert reuse_factor(f1) > 1.0
+
+    # deploy: encode -> decode -> packed kernel serves identical predictions
+    packed = to_packed(decode(encode(f1)))
+    pk = predict_packed_model(packed, sp.x_test)
+    ref = predict_binned(f1, bins_te)
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+    # the artifact really is tiny
+    assert encode(f1).n_bytes < 8192
+
+
+def test_memory_limited_training_fits_mcu_budget():
+    """toad_forestsize: a 1 KB model for an Arduino-class target."""
+    ds = load("california_housing", seed=2, n=4000)
+    sp = split_dataset(ds, seed=2, n_bins=64)
+    edges = jnp.asarray(sp.edges)
+    bins_tr = apply_bins(jnp.asarray(sp.x_train), edges)
+    cfg = GBDTConfig(task="regression", n_rounds=256, max_depth=2, learning_rate=0.15,
+                     toad_penalty_feature=1.0, toad_penalty_threshold=0.25,
+                     toad_forestsize=1024.0)
+    f, h, aux = train_jit(cfg, bins_tr, jnp.asarray(sp.y_train), edges)
+    assert float(aux["toad_bytes"]) <= 1024.0
+    assert encode(f).n_bytes <= 1024.0
+    loss = make_loss("regression")
+    r2 = float(loss.metric(
+        jnp.asarray(sp.y_test),
+        predict_binned(f, apply_bins(jnp.asarray(sp.x_test), edges)),
+    ))
+    assert r2 > 0.5  # a 1KB model that still explains most of the variance

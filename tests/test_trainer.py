@@ -1,0 +1,148 @@
+"""GBDT trainer invariants + the ToaD penalty semantics."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.gbdt import (
+    GBDTConfig,
+    apply_bins,
+    fit_bins,
+    make_loss,
+    predict_binned,
+    train_jit,
+)
+from repro.gbdt.trainer import train_grid
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    n, d = 2500, 8
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (1.2 * X[:, 0] - X[:, 1] + 0.4 * X[:, 2] * X[:, 3] > 0).astype(np.float32)
+    edges = jnp.asarray(fit_bins(X, 32))
+    bins = apply_bins(jnp.asarray(X), edges)
+    return bins, jnp.asarray(y), edges
+
+
+def test_learns(data):
+    bins, y, edges = data
+    cfg = GBDTConfig(task="binary", n_rounds=30, max_depth=3, learning_rate=0.2)
+    forest, hist, aux = train_jit(cfg, bins, y, edges)
+    acc = float(jnp.mean((predict_binned(forest, bins)[:, 0] > 0) == y))
+    assert acc > 0.9
+
+
+def test_binned_and_raw_predictions_agree(data):
+    # structural: traversal over bins == traversal over raw values
+    from repro.gbdt import predict_raw
+
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(300, 8)).astype(np.float32)
+    edges = jnp.asarray(fit_bins(X, 16))
+    bins = apply_bins(jnp.asarray(X), edges)
+    y = (X[:, 0] > 0).astype(np.float32)
+    cfg = GBDTConfig(task="binary", n_rounds=8, max_depth=3)
+    forest, _, _ = train_jit(cfg, bins, jnp.asarray(y), edges)
+    np.testing.assert_allclose(
+        np.asarray(predict_binned(forest, bins)),
+        np.asarray(predict_raw(forest, jnp.asarray(X))),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_penalties_reduce_used_sets(data):
+    bins, y, edges = data
+    base = GBDTConfig(task="binary", n_rounds=20, max_depth=3)
+    f0, h0, a0 = train_jit(base, bins, y, edges)
+    cfg = dataclasses.replace(base, toad_penalty_feature=8.0, toad_penalty_threshold=2.0)
+    f1, h1, a1 = train_jit(cfg, bins, y, edges)
+    assert int(h1["n_fu"][-1]) <= int(h0["n_fu"][-1])
+    assert int(h1["n_thr"][-1]) <= int(h0["n_thr"][-1])
+    assert float(a1["toad_bytes"]) < float(a0["toad_bytes"])
+
+
+def test_penalty_monotone_in_threshold_count(data):
+    bins, y, edges = data
+    counts = []
+    for pt in [0.0, 1.0, 8.0, 64.0]:
+        cfg = GBDTConfig(task="binary", n_rounds=16, max_depth=2,
+                         toad_penalty_threshold=pt)
+        _, h, _ = train_jit(cfg, bins, y, edges)
+        counts.append(int(h["n_thr"][-1]))
+    assert counts == sorted(counts, reverse=True)
+
+
+def test_forestsize_budget_respected(data):
+    bins, y, edges = data
+    budget = 400.0  # bytes
+    cfg = GBDTConfig(task="binary", n_rounds=64, max_depth=3, toad_forestsize=budget)
+    forest, hist, aux = train_jit(cfg, bins, y, edges)
+    assert float(aux["toad_bytes"]) <= budget
+    assert int(forest.n_trees) >= 1
+
+
+def test_every_split_has_positive_gain(data):
+    bins, y, edges = data
+    cfg = GBDTConfig(task="binary", n_rounds=10, max_depth=4)
+    forest, _, aux = train_jit(cfg, bins, y, edges)
+    K = int(forest.n_trees)
+    gains = np.asarray(aux["node_gain"])[:K]
+    splits = np.asarray(forest.is_split)[:K]
+    assert np.all(gains[splits] > 0)
+
+
+def test_split_leaf_count_identity(data):
+    """#reachable leaves == #splits + 1 per tree (binary-tree invariant)."""
+    bins, y, edges = data
+    cfg = GBDTConfig(task="binary", n_rounds=6, max_depth=4)
+    forest, hist, aux = train_jit(cfg, bins, y, edges)
+    K = int(forest.n_trees)
+    cnts = np.asarray(aux["leaf_cnt"])[:K]
+    splits = np.asarray(forest.is_split)[:K]
+    n = float(jnp.sum(jnp.ones_like(y)))
+    # every sample lands in exactly one leaf per tree
+    np.testing.assert_allclose(cnts.sum(axis=1), n)
+
+
+def test_vmapped_grid_matches_single_runs(data):
+    bins, y, edges = data
+    cfg = GBDTConfig(task="binary", n_rounds=8, max_depth=2)
+    pf = jnp.asarray([0.0, 4.0], jnp.float32)
+    pt = jnp.asarray([0.0, 1.0], jnp.float32)
+    fs = jnp.zeros(2, jnp.float32)
+    forests, hists, auxs = train_grid(cfg, bins, y, edges, pf, pt, fs)
+    for i in range(2):
+        f_i, h_i, a_i = train_jit(cfg, bins, y, edges, float(pf[i]), float(pt[i]), 0.0)
+        assert bool(jnp.all(forests.feature[i] == f_i.feature))
+        assert bool(jnp.all(forests.is_split[i] == f_i.is_split))
+        np.testing.assert_allclose(
+            np.asarray(forests.leaf_values[i]), np.asarray(f_i.leaf_values), rtol=1e-6
+        )
+
+
+def test_multiclass_one_ensemble_per_class():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(1200, 5)).astype(np.float32)
+    y = np.digitize(X[:, 0], [-0.6, 0.6]).astype(np.float32)
+    edges = jnp.asarray(fit_bins(X, 16))
+    bins = apply_bins(jnp.asarray(X), edges)
+    cfg = GBDTConfig(task="multiclass", n_classes=3, n_rounds=10, max_depth=2)
+    forest, _, _ = train_jit(cfg, bins, jnp.asarray(y), edges)
+    assert forest.n_ensembles == 3
+    assert int(forest.n_trees) == 30
+    loss = make_loss("multiclass", 3)
+    acc = float(loss.metric(jnp.asarray(y), predict_binned(forest, bins)))
+    assert acc > 0.85
+
+
+def test_leaf_value_sharing_quantized(data):
+    bins, y, edges = data
+    cfg = GBDTConfig(task="binary", n_rounds=20, max_depth=3, leaf_quant=0.02)
+    f, h, _ = train_jit(cfg, bins, y, edges)
+    n_leaves = int(h["n_splits"][-1]) + int(f.n_trees)
+    # quantization must force actual sharing
+    assert int(f.n_leaf_values) < n_leaves
