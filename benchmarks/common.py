@@ -36,7 +36,7 @@ def cumulative_metrics(forest: Forest, bins, y, loss):
         contrib = forest.leaf_values[ref]
         active = (t_idx < forest.n_trees).astype(contrib.dtype)
         cls = t_idx % C
-        acc = acc + contrib[:, None] * active * jax.nn.one_hot(cls, C, dtype=contrib.dtype)
+        acc = acc.at[:, cls].add(contrib * active)
         return acc, loss.metric(y, acc)
 
     acc0 = jnp.zeros((n, C), jnp.float32) + forest.base_score[None, :]

@@ -1,6 +1,7 @@
 """Paper Fig. 4: best quality achievable at each memory limit, ToaD vs
 baselines.  One training run per (method, depth); the per-round history +
-prefix-metric trick evaluates every ensemble size at once."""
+prefix-metric trick evaluates every ensemble size at once.  Training goes
+through ``ToadModel.fit_binned`` (bin once, train many models)."""
 
 from __future__ import annotations
 
@@ -10,9 +11,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import best_under_limit, cumulative_metrics, per_round_bytes, save_json
+from repro.api import ToadModel
 from repro.data.pipeline import split_dataset
 from repro.data.synth import load
-from repro.gbdt import GBDTConfig, apply_bins, make_loss, train_jit
+from repro.gbdt import GBDTConfig, apply_bins, make_loss
 from repro.gbdt.baselines import ccp_prune, cegb_config, quantize_forest
 
 LIMITS = [256, 512, 1024, 2048, 4096, 8192, 16384, 32768]  # bytes
@@ -42,7 +44,8 @@ def run(datasets=("covtype_binary", "california_housing", "wine_quality", "kr_vs
                 base = GBDTConfig(task=ds.task, n_classes=ds.n_classes,
                                   n_rounds=n_rounds, max_depth=depth, learning_rate=0.15)
                 # vanilla (= LightGBM-like); also ToaD layout without penalties
-                f0, h0, a0 = train_jit(base, btr, ytr, edges)
+                m0 = ToadModel(config=base).fit_binned(btr, ytr, edges)
+                f0, h0, a0 = m0.forest, m0.history, m0.aux
                 met0 = cumulative_metrics(f0, bte, yte, loss)
                 acc0 = np.asarray(h0["accepted"])
                 pb = per_round_bytes(h0, f0)
@@ -58,14 +61,16 @@ def run(datasets=("covtype_binary", "california_housing", "wine_quality", "kr_vs
                     cfg = dataclasses.replace(
                         base, toad_penalty_feature=pf, toad_penalty_threshold=pt
                     )
-                    f1, h1, _ = train_jit(cfg, btr, ytr, edges)
+                    m1 = ToadModel(config=cfg).fit_binned(btr, ytr, edges)
+                    f1, h1 = m1.forest, m1.history
                     add_curve("toad_penalized", np.asarray(h1["bytes"]),
                               cumulative_metrics(f1, bte, yte, loss),
                               np.asarray(h1["accepted"]))
 
                 # CEGB
                 for tr in (1.0, 8.0):
-                    fc, hc, _ = train_jit(cegb_config(base, tr), btr, ytr, edges)
+                    mc = ToadModel(config=cegb_config(base, tr)).fit_binned(btr, ytr, edges)
+                    fc, hc = mc.forest, mc.history
                     pbc = per_round_bytes(hc, fc)
                     add_curve("cegb", pbc["pointer_f32"],
                               cumulative_metrics(fc, bte, yte, loss),

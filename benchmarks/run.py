@@ -54,6 +54,18 @@ def main() -> None:
     bench("table2", lambda: table2_latency.run(verbose=False))
     bench("roofline", lambda: roofline.main(verbose=False))
 
+    def serve_bench():
+        # end-to-end GBDT serving through the micro-batching engine
+        ns = argparse.Namespace(
+            arch="toad-gbdt", backend="packed", requests=1024, clients=4,
+            max_batch=256, max_wait_ms=2.0, smoke=not args.full,
+        )
+        from repro.launch.serve import serve_gbdt
+
+        return serve_gbdt(ns)
+
+    bench("serve_gbdt", serve_bench)
+
     # trend checks + headline numbers
     print("\n=== summary (name,us_per_call,derived) ===")
     for name, dt, out in summary:
@@ -76,6 +88,9 @@ def main() -> None:
             derived = f"dominated_fraction={fig7_multivariate.nondominated_fraction(out)}"
         elif name == "table2" and out:
             derived = f"packed/dense={out[1]['derived']:.2f}x"
+        elif name == "serve_gbdt" and out:
+            derived = (f"req_per_s={out['req_per_s']:.0f} "
+                       f"p95_ms={out['latency_p95_ms']:.2f}")
         elif name == "roofline" and out:
             ok = [r for r in out if r.get("status") == "OK" and r.get("mfu_floor") == r.get("mfu_floor")]
             if ok:

@@ -1,28 +1,27 @@
 """Paper Tab. 2 / App. E.1: per-prediction latency of the deployed model.
 
-No MCU in the container, so we measure the CPU analogues:
-  * ``packed_ref``   — jitted jnp traversal of the bit-packed ToaD artifact
-                       (the deployment form; global tables + references);
-  * ``dense_forest`` — jitted traversal of the uncompressed dense arrays
-                       (the 'LightGBM' analogue);
-  * ``pallas_interp``— the TPU kernel in interpret mode (correctness path;
-                       its absolute time is NOT meaningful on CPU).
+No MCU in the container, so we measure the CPU analogues through the
+``ToadModel`` predictor backends:
+
+  * ``reference`` — jitted traversal of the uncompressed dense arrays
+                    (the 'LightGBM' analogue);
+  * ``packed``    — jitted jnp traversal of the bit-packed ToaD artifact
+                    (the deployment form; global tables + references);
+  * ``pallas``    — the TPU kernel in interpret mode off-TPU (correctness
+                    path; its absolute time is NOT meaningful on CPU).
 
 The paper observed a ~5-8x slowdown for ToaD's bit-unpacking on MCUs; the
-derived column reports our packed/dense ratio as the same trade-off proxy.
+derived column reports our packed/reference ratio as the same trade-off
+proxy.
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import save_json, timer
-from repro.core import decode, encode, to_packed
-from repro.gbdt import GBDTConfig, apply_bins, fit_bins, predict_raw, train_jit
-from repro.kernels.ops import predict_packed_model
-from repro.kernels.ref import packed_predict_ref
+from repro.api import ToadModel
 
 
 def run(n=500, d=54, rounds=4, depth=4, verbose=True):
@@ -30,29 +29,19 @@ def run(n=500, d=54, rounds=4, depth=4, verbose=True):
     rng = np.random.default_rng(0)
     X = rng.normal(size=(4000, d)).astype(np.float32)
     y = (X[:, 0] - X[:, 1] > 0).astype(np.float32)
-    edges = jnp.asarray(fit_bins(X, 64))
-    bins = apply_bins(jnp.asarray(X), edges)
-    cfg = GBDTConfig(task="binary", n_rounds=rounds, max_depth=depth,
-                     toad_penalty_feature=2.0, toad_penalty_threshold=0.5)
-    forest, _, _ = train_jit(cfg, bins, jnp.asarray(y), edges)
-    packed = to_packed(decode(encode(forest)))
+    model = ToadModel(
+        task="binary", n_bins=64, n_rounds=rounds, max_depth=depth,
+        toad_penalty_feature=2.0, toad_penalty_threshold=0.5,
+    ).fit(X, y).compress()
     Xq = jnp.asarray(X[:n])
 
-    dense_fn = jax.jit(lambda x: predict_raw(forest, x))
-    packed_fn = jax.jit(
-        lambda x: packed_predict_ref(
-            x, jnp.asarray(packed.words), jnp.asarray(packed.leaf_ref),
-            jnp.asarray(packed.leaf_values), jnp.asarray(packed.thr_table),
-            jnp.asarray(packed.thr_offsets), jnp.asarray(packed.used_features),
-            jnp.asarray(packed.base_score),
-            max_depth=packed.max_depth, tidx_bits=packed.tidx_bits,
-            n_ensembles=packed.n_ensembles,
-        )
-    )
+    dense_fn = model.predictor("reference")
+    packed_fn = model.predictor("packed")
+    kernel_fn = model.predictor("pallas")
 
     t_dense = timer(dense_fn, Xq) / n * 1e6
     t_packed = timer(packed_fn, Xq) / n * 1e6
-    t_kernel = timer(lambda x: predict_packed_model(packed, x), Xq, reps=2, warmup=1) / n * 1e6
+    t_kernel = timer(kernel_fn, Xq, reps=2, warmup=1) / n * 1e6
 
     rows = [
         {"name": "dense_forest", "us_per_call": t_dense, "derived": 1.0},

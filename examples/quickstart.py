@@ -1,43 +1,72 @@
-"""Quickstart: train a ToaD-compressed boosted ensemble and inspect the
-quality/memory trade-off.
+"""Quickstart: the ToadModel estimator API end to end.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The lifecycle (paper Sec. 3):
+
+    1. ``ToadModel(...).fit(X, y)``  — histogram GBDT training with the
+       ToaD penalties ι (new-feature cost) and ξ (new-threshold cost);
+    2. ``.compress()``              — serialize to the bit-packed ToaD
+       stream and build the deployment artifact (uint32 node words +
+       global threshold/leaf tables);
+    3. ``.predict(X, backend=...)`` — run inference through any registered
+       predictor backend; all backends agree to <= 1e-5:
+         * ``reference`` — pure-jnp traversal of the dense training forest,
+         * ``packed``    — jitted traversal of the decoded ToaD arrays,
+         * ``pallas``    — the TPU kernel (interpret mode off-TPU),
+         * ``None``      — auto-select for the platform;
+    4. ``.memory_report()``         — every layout's size + reuse factor;
+    5. ``.save(path)`` / ``ToadModel.load(path)`` — persistence.
+
+For serving, wrap the model in ``repro.api.GBDTEngine`` (micro-batching
+queue; see ``python -m repro.launch.serve --arch toad-gbdt``).
 """
 
-import jax.numpy as jnp
+import numpy as np
 
-from repro.core import compression_summary, encode, reuse_factor
+from repro.api import ToadModel, available_backends
 from repro.data.pipeline import split_dataset
 from repro.data.synth import load
-from repro.gbdt import GBDTConfig, apply_bins, make_loss, predict_binned, train_jit
 
 
 def main():
     ds = load("california_housing", seed=1, n=8000)
     sp = split_dataset(ds, seed=1, n_bins=64)
-    edges = jnp.asarray(sp.edges)
-    bins_tr = apply_bins(jnp.asarray(sp.x_train), edges)
-    bins_te = apply_bins(jnp.asarray(sp.x_test), edges)
-    loss = make_loss(ds.task)
 
+    print(f"predictor backends available here: {', '.join(available_backends())}\n")
+
+    models = {}
     for label, (pf, pt) in {
         "vanilla GBDT          ": (0.0, 0.0),
         "ToaD  ι=4, ξ=1        ": (4.0, 1.0),
         "ToaD  ι=16, ξ=4       ": (16.0, 4.0),
     }.items():
-        cfg = GBDTConfig(task=ds.task, n_rounds=64, max_depth=3, learning_rate=0.15,
-                         toad_penalty_feature=pf, toad_penalty_threshold=pt)
-        forest, hist, aux = train_jit(cfg, bins_tr, jnp.asarray(sp.y_train), edges)
-        r2 = float(loss.metric(jnp.asarray(sp.y_test), predict_binned(forest, bins_te)))
-        s = compression_summary(forest)
-        print(f"{label} R2={r2:.3f}  toad={s['toad_bytes']:7.0f}B "
-              f"(x{s['compression_vs_f32']:.1f} vs fp32 pointers) "
+        model = ToadModel(
+            task=ds.task, n_bins=64, n_rounds=64, max_depth=3, learning_rate=0.15,
+            toad_penalty_feature=pf, toad_penalty_threshold=pt,
+        ).fit(sp.x_train, sp.y_train).compress()
+        r2 = model.score(sp.x_test, sp.y_test)
+        rep = model.memory_report()
+        hist = model.history
+        print(f"{label} R2={r2:.3f}  toad={rep['toad_bytes']:7.0f}B "
+              f"(x{rep['compression_vs_f32']:.1f} vs fp32 pointers) "
               f"features={int(hist['n_fu'][-1])} thresholds={int(hist['n_thr'][-1])} "
-              f"ReF={reuse_factor(forest):.2f}")
+              f"ReF={rep['reuse_factor']:.2f}")
+        models[label] = model
 
-    # serialize the smallest model
-    print(f"\nencoded artifact: {encode(forest).n_bytes:.0f} bytes "
+    # every backend produces the same scores for the deployed model
+    smallest = models["ToaD  ι=16, ξ=4       "]
+    ref = smallest.predict(sp.x_test, backend="reference")
+    for b in available_backends():
+        err = float(np.abs(smallest.predict(sp.x_test, backend=b) - ref).max())
+        print(f"backend {b:9s} max|Δ| vs reference = {err:.2e}")
+
+    print(f"\nencoded artifact: {smallest.encoded.n_bytes:.0f} bytes "
           f"— fits an Arduino EEPROM")
+    path = smallest.save("/tmp/toad_quickstart.npz")
+    restored = ToadModel.load(path)
+    assert np.allclose(restored.predict(sp.x_test, backend="reference"), ref, atol=1e-6)
+    print(f"saved + restored from {path}: predictions identical")
 
 
 if __name__ == "__main__":

@@ -1,20 +1,18 @@
 """End-to-end driver (the paper's kind: GBDT training): fit a production
 ToaD model on the covertype stand-in under an explicit device-memory
-budget, evaluate, and export the deployable artifact.
+budget, evaluate, and export the deployable artifact — all through the
+``ToadModel`` facade.
 
     PYTHONPATH=src python examples/train_toad.py --budget-bytes 2048
 """
 
 import argparse
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compression_summary, decode, encode, reuse_factor, to_packed
+from repro.api import ToadModel, available_backends
 from repro.data.pipeline import split_dataset
 from repro.data.synth import load
-from repro.gbdt import GBDTConfig, apply_bins, make_loss, predict_binned, train_jit
-from repro.kernels.ops import predict_packed_model
 
 
 def main():
@@ -26,49 +24,48 @@ def main():
     ap.add_argument("--budget-bytes", type=float, default=2048.0)
     ap.add_argument("--penalty-feature", type=float, default=8.0)
     ap.add_argument("--penalty-threshold", type=float, default=2.0)
+    ap.add_argument("--backend", default=None,
+                    help="deploy-check backend (default: auto)")
     ap.add_argument("--export", default="/tmp/toad_model.bin")
     args = ap.parse_args()
 
     ds = load(args.dataset, seed=1, n=args.n)
     sp = split_dataset(ds, seed=1, n_bins=64)
-    edges = jnp.asarray(sp.edges)
-    bins_tr = apply_bins(jnp.asarray(sp.x_train), edges)
-    bins_te = apply_bins(jnp.asarray(sp.x_test), edges)
-    loss = make_loss(ds.task, ds.n_classes)
 
-    cfg = GBDTConfig(
-        task=ds.task, n_classes=ds.n_classes, n_rounds=args.rounds,
-        max_depth=args.depth, learning_rate=0.1,
+    model = ToadModel(
+        task=ds.task, n_classes=ds.n_classes, n_bins=64,
+        n_rounds=args.rounds, max_depth=args.depth, learning_rate=0.1,
         toad_penalty_feature=args.penalty_feature,
         toad_penalty_threshold=args.penalty_threshold,
         toad_forestsize=args.budget_bytes,
     )
     print(f"training {args.dataset} (n={ds.n}) under a "
           f"{args.budget_bytes:.0f}-byte budget ...")
-    forest, hist, aux = train_jit(cfg, bins_tr, jnp.asarray(sp.y_train), edges)
-    metric = float(loss.metric(jnp.asarray(sp.y_test), predict_binned(forest, bins_te)))
-    s = compression_summary(forest)
-    accepted = int(np.asarray(hist["accepted"]).sum())
+    model.fit(sp.x_train, sp.y_train).compress()
+
+    metric = model.score(sp.x_test, sp.y_test)
+    rep = model.memory_report()
+    accepted = int(np.asarray(model.history["accepted"]).sum())
     print(f"rounds accepted: {accepted}/{args.rounds} "
           f"(stopped at the byte budget)")
     print(f"test metric: {metric:.4f}")
-    print(f"ToaD size: {s['toad_bytes']:.0f} B  "
-          f"pointer-fp32 equivalent: {s['pointer_f32_bytes']:.0f} B "
-          f"({s['compression_vs_f32']:.1f}x)")
-    print(f"ReF: {reuse_factor(forest):.2f}")
+    print(f"ToaD size: {rep['toad_bytes']:.0f} B  "
+          f"pointer-fp32 equivalent: {rep['pointer_f32_bytes']:.0f} B "
+          f"({rep['compression_vs_f32']:.1f}x)")
+    print(f"ReF: {rep['reuse_factor']:.2f}")
 
-    enc = encode(forest)
     with open(args.export, "wb") as f:
-        f.write(enc.data.tobytes())
-    print(f"exported {enc.n_bytes:.0f} bytes -> {args.export}")
+        f.write(model.encoded.data.tobytes())
+    print(f"exported {model.encoded.n_bytes:.0f} bytes -> {args.export}")
 
-    # verify the deployable artifact end to end
-    packed = to_packed(decode(enc))
-    pk = predict_packed_model(packed, sp.x_test[:256])
-    ref = predict_binned(forest, bins_te[:256])
-    err = float(jnp.max(jnp.abs(pk - ref)))
-    print(f"deploy check: packed-kernel vs trained forest max|Δ| = {err:.2e}")
-    assert err < 1e-4
+    # verify the deployable artifact end to end: every available backend
+    # must reproduce the reference scores on raw features
+    ref = model.predict(sp.x_test[:256], backend="reference")
+    explicit = args.backend not in (None, "auto")
+    for b in ([args.backend] if explicit else available_backends()):
+        err = float(np.abs(model.predict(sp.x_test[:256], backend=b) - ref).max())
+        print(f"deploy check [{b}]: max|Δ| vs reference = {err:.2e}")
+        assert err < 1e-4
 
 
 if __name__ == "__main__":

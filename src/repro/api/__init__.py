@@ -1,0 +1,27 @@
+"""Unified estimator API: ``ToadModel`` + pluggable predictor backends +
+the micro-batching GBDT serving engine.  See README.md in this package."""
+
+from repro.api.backends import (
+    PredictorBackend,
+    available_backends,
+    get_backend,
+    list_backends,
+    register_backend,
+    resolve_backend,
+)
+from repro.api.engine import EngineStats, GBDTEngine, MicroBatchEngine
+from repro.api.model import NotFittedError, ToadModel
+
+__all__ = [
+    "PredictorBackend",
+    "available_backends",
+    "get_backend",
+    "list_backends",
+    "register_backend",
+    "resolve_backend",
+    "EngineStats",
+    "GBDTEngine",
+    "MicroBatchEngine",
+    "NotFittedError",
+    "ToadModel",
+]

@@ -1,0 +1,157 @@
+"""Pluggable predictor backends behind one parity contract.
+
+A backend turns a fitted/compressed :class:`~repro.api.model.ToadModel`
+into a compiled ``(n, d) float32 -> (n, C) float32`` prediction function.
+All registered backends must agree with the training-side oracle
+(``repro.gbdt.predict_raw``) to <= 1e-5 — that contract is what lets the
+serving engine, the benchmarks and the examples treat the backend as a
+launch-time flag instead of an architecture decision.
+
+Built-ins:
+
+  * ``"reference"`` — pure-jnp traversal of the dense :class:`Forest`
+    (training layout; no compression step needed).
+  * ``"packed"``    — jitted jnp traversal of the decoded ToaD arrays
+    (the deployment artifact: uint32 node words + global tables).
+  * ``"pallas"``    — the TPU Pallas kernel over the same packed artifact
+    (interpret mode off-TPU, compiled on TPU).
+
+``resolve_backend(None)`` auto-selects per platform: ``pallas`` on TPU,
+else ``packed`` when the model is compressed, else ``reference``.
+"""
+
+from __future__ import annotations
+
+import abc
+import typing
+
+import jax
+import jax.numpy as jnp
+
+
+class PredictorBackend(abc.ABC):
+    """One way of executing a trained ToaD ensemble."""
+
+    #: registry key; set by @register_backend
+    name: str = "?"
+    #: whether build() needs model.compress() to have run (packed artifact)
+    requires_compressed: bool = True
+
+    @abc.abstractmethod
+    def build(self, model) -> typing.Callable:
+        """Return a compiled ``(n, d) -> (n, C)`` prediction callable."""
+
+    def is_available(self) -> bool:
+        """Whether this backend can run on the current platform."""
+        return True
+
+
+_REGISTRY: dict[str, PredictorBackend] = {}
+
+
+def register_backend(cls: type[PredictorBackend]) -> type[PredictorBackend]:
+    """Class decorator: instantiate and register under ``cls.name``."""
+    _REGISTRY[cls.name] = cls()
+    return cls
+
+
+def get_backend(name: str) -> PredictorBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def available_backends() -> list[str]:
+    return [n for n in sorted(_REGISTRY) if _REGISTRY[n].is_available()]
+
+
+def resolve_backend(name: str | None, *, compressed: bool) -> PredictorBackend:
+    """Select a backend by name, or auto-select for the platform.
+
+    Auto rule: ``pallas`` on a TPU backend; otherwise ``packed`` when the
+    model has a packed artifact, falling back to ``reference``.
+    """
+    if name is not None:
+        b = get_backend(name)
+        if not b.is_available():
+            raise RuntimeError(f"backend {name!r} is not available on this platform")
+        return b
+    if jax.default_backend() == "tpu" and compressed:
+        return get_backend("pallas")
+    return get_backend("packed" if compressed else "reference")
+
+
+# --------------------------------------------------------------------------
+# Built-in backends
+# --------------------------------------------------------------------------
+
+
+@register_backend
+class ReferenceBackend(PredictorBackend):
+    """Pure-jnp traversal of the dense training-side Forest."""
+
+    name = "reference"
+    requires_compressed = False
+
+    def build(self, model):
+        from repro.gbdt.forest import predict_raw
+
+        forest = model.forest
+        return jax.jit(lambda x: predict_raw(forest, x))
+
+
+@register_backend
+class PackedBackend(PredictorBackend):
+    """Jitted jnp traversal of the decoded ToaD arrays (deployment form)."""
+
+    name = "packed"
+
+    def build(self, model):
+        from repro.kernels.ref import packed_predict_ref
+
+        p = model.packed
+        consts = tuple(
+            jnp.asarray(a)
+            for a in (
+                p.words,
+                p.leaf_ref,
+                p.leaf_values,
+                p.thr_table,
+                p.thr_offsets,
+                p.used_features,
+                p.base_score,
+            )
+        )
+        return jax.jit(
+            lambda x: packed_predict_ref(
+                x,
+                *consts,
+                max_depth=p.max_depth,
+                tidx_bits=p.tidx_bits,
+                n_ensembles=p.n_ensembles,
+            )
+        )
+
+
+@register_backend
+class PallasBackend(PredictorBackend):
+    """The TPU Pallas kernel over the packed artifact.
+
+    Off-TPU the kernel runs in interpret mode — numerically identical but
+    slow; auto-selection therefore only picks it on a TPU backend.
+    """
+
+    name = "pallas"
+
+    def build(self, model):
+        from repro.kernels.ops import predict_packed_model
+
+        packed = model.packed
+        return lambda x: predict_packed_model(packed, x)

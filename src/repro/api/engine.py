@@ -1,0 +1,192 @@
+"""Model-agnostic micro-batching serving engine + the GBDT specialization.
+
+The engine owns a request queue and a worker thread.  Clients submit single
+raw-feature rows; the worker drains up to ``max_batch`` requests per step
+(waiting at most ``max_wait_ms`` for stragglers after the first arrival),
+pads the batch to a fixed shape bucket so the compiled predictor never
+re-traces, runs one prediction, and resolves the per-request futures.
+
+``MicroBatchEngine`` is model-agnostic: it takes any compiled
+``(n, d) -> (n, C)`` function.  ``GBDTEngine`` wires it to a
+:class:`~repro.api.model.ToadModel` through any registered predictor
+backend — the serving path and the parity contract are the same seam.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import queue
+import threading
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n_requests: int
+    n_batches: int
+    wall_s: float
+    req_per_s: float
+    mean_batch: float
+    latency_mean_ms: float
+    latency_p50_ms: float
+    latency_p95_ms: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class MicroBatchEngine:
+    """Batches single-row requests through one compiled predict function."""
+
+    def __init__(
+        self,
+        predict_fn,
+        n_features: int,
+        *,
+        max_batch: int = 256,
+        max_wait_ms: float = 2.0,
+    ):
+        self._predict = predict_fn
+        self.n_features = n_features
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self._queue: queue.Queue = queue.Queue()
+        self._worker: threading.Thread | None = None
+        self._stop = threading.Event()
+        self._latencies: list[float] = []
+        self._batch_sizes: list[int] = []
+        self._t_start = 0.0
+        self._t_busy_end = 0.0
+
+    # ---------------------------------------------------------------- client
+    def submit(self, x_row) -> concurrent.futures.Future:
+        """Enqueue one (d,) raw-feature request; resolves to a (C,) score."""
+        if self._worker is None:
+            raise RuntimeError("engine not started")
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        row = np.asarray(x_row, dtype=np.float32).reshape(self.n_features)
+        self._queue.put((row, time.perf_counter(), fut))
+        return fut
+
+    def predict(self, X) -> np.ndarray:
+        """Direct batched call through the same compiled path (no queue)."""
+        return np.asarray(self._predict(np.asarray(X, dtype=np.float32)))
+
+    # ---------------------------------------------------------------- worker
+    def start(self) -> "MicroBatchEngine":
+        if self._worker is not None:
+            return self
+        self._stop.clear()
+        self._latencies.clear()
+        self._batch_sizes.clear()
+        # warm the compiled predictor at every bucket shape so steady-state
+        # latency never pays a trace (and the stats clock starts after it)
+        for b in self._buckets():
+            self._predict(np.zeros((b, self.n_features), np.float32))
+        self._t_start = time.perf_counter()
+        self._worker = threading.Thread(target=self._run, name="gbdt-engine", daemon=True)
+        self._worker.start()
+        return self
+
+    def stop(self) -> "MicroBatchEngine":
+        if self._worker is None:
+            return self
+        self._stop.set()
+        self._worker.join()
+        self._worker = None
+        return self
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    def _buckets(self):
+        b, out = 1, []
+        while b < self.max_batch:
+            out.append(b)
+            b *= 2
+        out.append(self.max_batch)
+        return out
+
+    def _bucket(self, n: int) -> int:
+        for b in self._buckets():
+            if n <= b:
+                return b
+        return self.max_batch
+
+    def _run(self):
+        while not (self._stop.is_set() and self._queue.empty()):
+            try:
+                first = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            batch = [first]
+            deadline = time.perf_counter() + self.max_wait_s
+            while len(batch) < self.max_batch:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0 and self._queue.empty():
+                    break
+                try:
+                    batch.append(self._queue.get(timeout=max(remaining, 0.0)))
+                except queue.Empty:
+                    break
+            rows = np.stack([b[0] for b in batch])
+            n = rows.shape[0]
+            padded = self._bucket(n)
+            if padded != n:
+                rows = np.concatenate(
+                    [rows, np.zeros((padded - n, self.n_features), np.float32)]
+                )
+            try:
+                scores = np.asarray(self._predict(rows))[:n]
+            except Exception as exc:
+                # never strand clients: fail this batch's futures and keep
+                # the worker alive for the rest of the queue
+                for _, _, fut in batch:
+                    fut.set_exception(exc)
+                continue
+            done = time.perf_counter()
+            self._batch_sizes.append(n)
+            for (_, t_in, fut), s in zip(batch, scores):
+                self._latencies.append(done - t_in)
+                fut.set_result(s)
+            self._t_busy_end = done
+
+    # ----------------------------------------------------------------- stats
+    def stats(self) -> EngineStats:
+        lat = np.asarray(self._latencies, dtype=np.float64)
+        n = int(lat.size)
+        wall = max(self._t_busy_end - self._t_start, 1e-9)
+        return EngineStats(
+            n_requests=n,
+            n_batches=len(self._batch_sizes),
+            wall_s=wall,
+            req_per_s=n / wall,
+            mean_batch=float(np.mean(self._batch_sizes)) if self._batch_sizes else 0.0,
+            latency_mean_ms=float(lat.mean() * 1e3) if n else 0.0,
+            latency_p50_ms=float(np.percentile(lat, 50) * 1e3) if n else 0.0,
+            latency_p95_ms=float(np.percentile(lat, 95) * 1e3) if n else 0.0,
+        )
+
+
+class GBDTEngine(MicroBatchEngine):
+    """A MicroBatchEngine serving a ToadModel through a named backend."""
+
+    def __init__(
+        self,
+        model,
+        *,
+        backend: str | None = None,
+        max_batch: int = 256,
+        max_wait_ms: float = 2.0,
+    ):
+        fn = model.predictor(backend)
+        d = int(model.forest.n_features)
+        super().__init__(fn, d, max_batch=max_batch, max_wait_ms=max_wait_ms)
+        self.model = model
+        self.backend = backend or "auto"

@@ -1,0 +1,266 @@
+"""``ToadModel`` — the one-object estimator facade over the whole pipeline.
+
+The paper's lifecycle is train -> compress (ToaD stream, Sec. 3.2) ->
+deploy; this class is that lifecycle as an object::
+
+    model = ToadModel(task="binary", n_rounds=64, max_depth=3,
+                      toad_penalty_feature=4.0, toad_penalty_threshold=1.0)
+    model.fit(X_train, y_train).compress()
+    scores = model.predict(X_test)                  # auto backend
+    scores = model.predict(X_test, backend="packed")
+    model.save("model.toad.npz");  ToadModel.load("model.toad.npz")
+
+``predict`` returns the raw (n, C) ensemble margins — exactly what the
+deployed C implementation on an MCU computes, and bit-for-bit what
+``repro.gbdt.predict_raw`` returns.  ``predict_proba`` / ``predict_label``
+apply the task's link function on top.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.backends import PredictorBackend, resolve_backend
+from repro.core import (
+    compression_summary,
+    decode,
+    encode,
+    reuse_factor,
+    to_packed,
+)
+from repro.core.layout import EncodedModel
+from repro.gbdt import GBDTConfig, apply_bins, fit_bins, make_loss
+from repro.gbdt.forest import Forest
+
+_FOREST_FIELDS = (
+    "feature",
+    "thr_bin",
+    "is_split",
+    "leaf_ref",
+    "leaf_values",
+    "n_leaf_values",
+    "n_trees",
+    "edges",
+    "base_score",
+)
+
+
+class NotFittedError(RuntimeError):
+    pass
+
+
+class ToadModel:
+    """Estimator facade: fit / compress / predict / save / memory_report."""
+
+    def __init__(
+        self,
+        task: str = "regression",
+        n_classes: int = 0,
+        n_bins: int = 64,
+        config: GBDTConfig | None = None,
+        **config_kwargs,
+    ):
+        if config is None:
+            config = GBDTConfig(task=task, n_classes=n_classes, **config_kwargs)
+        elif config_kwargs:
+            config = dataclasses.replace(config, **config_kwargs)
+        self.config = config
+        self.n_bins = n_bins
+        self.forest: Forest | None = None
+        self.history: dict | None = None
+        self.aux: dict | None = None
+        self.encoded: EncodedModel | None = None
+        self.decoded = None
+        self.packed = None
+        self._loss = make_loss(config.task, config.n_classes)
+        self._predict_fns: dict[str, object] = {}
+
+    @classmethod
+    def from_forest(
+        cls, forest: Forest, config: GBDTConfig | None = None, n_bins: int | None = None
+    ) -> "ToadModel":
+        """Wrap an already-trained :class:`Forest` (e.g. from the distributed
+        trainer or a hand-built ensemble) in the estimator facade."""
+        if config is None:
+            task = "multiclass" if forest.n_ensembles > 1 else "regression"
+            config = GBDTConfig(task=task, n_classes=forest.n_ensembles)
+        model = cls(config=config, n_bins=n_bins or forest.n_bins)
+        model.forest = forest
+        return model
+
+    # ------------------------------------------------------------- lifecycle
+    @property
+    def is_fitted(self) -> bool:
+        return self.forest is not None
+
+    @property
+    def is_compressed(self) -> bool:
+        return self.packed is not None
+
+    def _require_fitted(self):
+        if not self.is_fitted:
+            raise NotFittedError("call fit() (or load()) before this operation")
+
+    def fit(self, X, y) -> "ToadModel":
+        """Bin ``X``, train the ToaD-regularized GBDT, keep the history."""
+        from repro.gbdt import train_jit
+
+        X = np.asarray(X, dtype=np.float32)
+        y = np.asarray(y, dtype=np.float32)
+        edges = jnp.asarray(fit_bins(X, self.n_bins))
+        bins = apply_bins(jnp.asarray(X), edges)
+        self.forest, self.history, self.aux = train_jit(
+            self.config, bins, jnp.asarray(y), edges
+        )
+        # fitted state changed: drop compiled predictors and artifacts
+        self.encoded = self.decoded = self.packed = None
+        self._predict_fns.clear()
+        return self
+
+    def fit_binned(self, bins, y, edges) -> "ToadModel":
+        """Train from pre-binned features + edges (skips the binning pass).
+
+        The benchmark drivers bin a dataset once and train many models on
+        it; this entry point keeps that efficiency while everything
+        downstream (compress / predict / report) goes through the facade.
+        """
+        from repro.gbdt import train_jit
+
+        self.forest, self.history, self.aux = train_jit(
+            self.config, jnp.asarray(bins), jnp.asarray(np.asarray(y, np.float32)),
+            jnp.asarray(edges)
+        )
+        self.encoded = self.decoded = self.packed = None
+        self._predict_fns.clear()
+        return self
+
+    def compress(self) -> "ToadModel":
+        """Serialize to the ToaD stream and build the deployment artifacts.
+
+        encode -> bit stream, decode -> dense value arrays, to_packed ->
+        uint32 node words + global tables (what the packed/pallas backends
+        execute).  Returns self for chaining.
+        """
+        self._require_fitted()
+        self.encoded = encode(self.forest)
+        self.decoded = decode(self.encoded)
+        self.packed = to_packed(self.decoded)
+        self._predict_fns.clear()
+        return self
+
+    # ------------------------------------------------------------ prediction
+    def predictor(self, backend: str | PredictorBackend | None = None):
+        """The compiled ``(n, d) -> (n, C)`` function for a backend.
+
+        Backends that execute the packed artifact trigger ``compress()``
+        implicitly on first use.
+        """
+        self._require_fitted()
+        if isinstance(backend, PredictorBackend):
+            b = backend
+        else:
+            b = resolve_backend(backend, compressed=self.is_compressed)
+        if b.requires_compressed and not self.is_compressed:
+            self.compress()
+        fn = self._predict_fns.get(b.name)
+        if fn is None:
+            fn = b.build(self)
+            self._predict_fns[b.name] = fn
+        return fn
+
+    def predict(self, X, backend: str | None = None) -> np.ndarray:
+        """(n, d) raw floats -> (n, C) raw ensemble scores (margins)."""
+        x = jnp.asarray(np.asarray(X, dtype=np.float32))
+        return np.asarray(self.predictor(backend)(x))
+
+    def predict_proba(self, X, backend: str | None = None) -> np.ndarray:
+        """(n, d) -> (n, n_classes) probabilities (classification tasks)."""
+        scores = self.predict(X, backend=backend)
+        if self.config.task == "binary":
+            p = 1.0 / (1.0 + np.exp(-scores[:, 0]))
+            return np.stack([1.0 - p, p], axis=1)
+        if self.config.task == "multiclass":
+            z = scores - scores.max(axis=1, keepdims=True)
+            e = np.exp(z)
+            return e / e.sum(axis=1, keepdims=True)
+        raise ValueError("predict_proba is undefined for regression")
+
+    def predict_label(self, X, backend: str | None = None) -> np.ndarray:
+        """(n, d) -> (n,) predicted value / class id."""
+        scores = self.predict(X, backend=backend)
+        if self.config.task == "binary":
+            return (scores[:, 0] > 0).astype(np.int32)
+        if self.config.task == "multiclass":
+            return np.argmax(scores, axis=1).astype(np.int32)
+        return scores[:, 0]
+
+    def score(self, X, y, backend: str | None = None) -> float:
+        """Task metric (R² / accuracy) on raw features."""
+        scores = self.predict(X, backend=backend)
+        return float(
+            self._loss.metric(jnp.asarray(np.asarray(y, np.float32)), jnp.asarray(scores))
+        )
+
+    # -------------------------------------------------------------- analysis
+    def memory_report(self) -> dict:
+        """All layout sizes + reuse factor + exact encoded stream length."""
+        self._require_fitted()
+        report = compression_summary(self.forest)
+        report["reuse_factor"] = reuse_factor(self.forest)
+        if self.encoded is not None:
+            report["encoded_stream_bytes"] = self.encoded.n_bytes
+            report["encoded_stream_bits"] = self.encoded.n_bits
+        if self.aux is not None and "toad_bytes" in self.aux:
+            report["trainer_accounted_bytes"] = float(np.asarray(self.aux["toad_bytes"]))
+        return report
+
+    # ------------------------------------------------------------ persistence
+    def save(self, path: str) -> str:
+        """Persist config + forest (+ ToaD stream when compressed) to .npz."""
+        self._require_fitted()
+        arrays = {f: np.asarray(getattr(self.forest, f)) for f in _FOREST_FIELDS}
+        meta = {
+            "config": dataclasses.asdict(self.config),
+            "n_bins": self.n_bins,
+            "n_ensembles": self.forest.n_ensembles,
+            "compressed": self.is_compressed,
+        }
+        arrays["meta_json"] = np.frombuffer(
+            json.dumps(meta).encode("utf-8"), dtype=np.uint8
+        )
+        if self.encoded is not None:
+            arrays["toad_stream"] = self.encoded.data
+            arrays["toad_stream_bits"] = np.asarray(self.encoded.n_bits, np.int64)
+        np.savez_compressed(path, **arrays)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ToadModel":
+        with np.load(path) as z:
+            meta = json.loads(bytes(z["meta_json"].tobytes()).decode("utf-8"))
+            model = cls(config=GBDTConfig(**meta["config"]), n_bins=meta["n_bins"])
+            model.forest = Forest(
+                **{f: jnp.asarray(z[f]) for f in _FOREST_FIELDS},
+                n_ensembles=int(meta["n_ensembles"]),
+            )
+            if meta.get("compressed") and "toad_stream" in z:
+                model.encoded = EncodedModel(
+                    data=np.array(z["toad_stream"], dtype=np.uint8),
+                    n_bits=int(z["toad_stream_bits"]),
+                )
+                model.decoded = decode(model.encoded)
+                model.packed = to_packed(model.decoded)
+        return model
+
+    def __repr__(self) -> str:
+        state = (
+            "unfitted"
+            if not self.is_fitted
+            else f"trees={int(self.forest.n_trees)}"
+            + (", compressed" if self.is_compressed else "")
+        )
+        return f"ToadModel(task={self.config.task!r}, {state})"

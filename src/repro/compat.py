@@ -1,0 +1,74 @@
+"""Version shims for the jax API surface this repo targets.
+
+The code is written against the explicit-sharding API (``jax.make_mesh``
+with ``axis_types``, ``jax.set_mesh``); jax 0.4.x has neither.  These
+helpers resolve the best available equivalent at call time so the same
+call sites run on both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names, axis_types=(axis_type.Auto,) * len(axis_names)
+            )
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    jax >= 0.5 exposes ``jax.set_mesh``; before that, ``Mesh`` is itself a
+    context manager with the resource-env semantics the callers need.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh installed by :func:`set_mesh`, or None.
+
+    New jax returns the abstract mesh; old jax returns the physical mesh
+    from the resource env (which shard_map and ``.axis_names`` callers
+    accept equally).
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def in_manual_axes() -> bool:
+    """True when tracing inside a shard_map body (old jax only; new jax
+    exposes this through the abstract mesh's Manual axis types instead)."""
+    try:
+        from jax._src import core as _core
+
+        return bool(_core.get_axis_env().axis_sizes)
+    except Exception:
+        return False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map`` with the pre-0.5 fallback (experimental module,
+    ``check_rep`` spelling of ``check_vma``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )

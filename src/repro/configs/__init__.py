@@ -38,6 +38,20 @@ ARCHS = {
 GBDT_CONFIGS = {"toad_gbdt": toad_gbdt}
 
 
+def _norm_gbdt(name: str) -> str:
+    return name.replace("-", "_")
+
+
+def is_gbdt_arch(name: str) -> bool:
+    """True for the paper's own workload names ('toad-gbdt' / 'toad_gbdt')."""
+    return _norm_gbdt(name) in GBDT_CONFIGS
+
+
+def get_gbdt_config(name: str, reduced: bool = False):
+    mod = GBDT_CONFIGS[_norm_gbdt(name)]
+    return mod.reduced() if reduced else mod.config()
+
+
 def get_config(name: str):
     return ARCHS[name].config()
 

@@ -6,7 +6,15 @@
 """
 
 from repro.core.bitio import BitReader, BitWriter, bits_for
-from repro.core.layout import DecodedModel, EncodedModel, PackedEnsemble, decode, encode, to_packed
+from repro.core.layout import (
+    DecodedModel,
+    EncodedModel,
+    PackedEnsemble,
+    decode,
+    encode,
+    from_packed,
+    to_packed,
+)
 from repro.core.memory import (
     array_bits,
     compression_summary,
@@ -26,6 +34,7 @@ __all__ = [
     "PackedEnsemble",
     "decode",
     "encode",
+    "from_packed",
     "to_packed",
     "array_bits",
     "compression_summary",

@@ -347,6 +347,7 @@ class PackedEnsemble:
     max_depth: int
     tidx_bits: int
     fu_bits: int
+    n_features: int = 0      # d; input width the model was trained on
 
 
 def to_packed(dec: DecodedModel) -> PackedEnsemble:
@@ -370,4 +371,48 @@ def to_packed(dec: DecodedModel) -> PackedEnsemble:
         max_depth=dec.max_depth,
         tidx_bits=tidx_bits,
         fu_bits=fu_bits,
+        n_features=dec.n_features,
+    )
+
+
+def from_packed(packed: PackedEnsemble) -> DecodedModel:
+    """Exact inverse of :func:`to_packed`.
+
+    Unpacks the uint32 node words back into the dense per-node arrays, so
+    ``to_packed(from_packed(p))`` reproduces ``p`` bit for bit.  This is the
+    round-trip contract the ``"packed"`` predictor backend relies on: a
+    packed artifact is a complete, self-contained model.
+    """
+    n_fu = len(packed.used_features)
+    tmask = np.uint32((1 << packed.tidx_bits) - 1)
+    feature_ref = (packed.words >> np.uint32(packed.tidx_bits)).astype(np.int32)
+    thr_idx = (packed.words & tmask).astype(np.int32)
+    is_split = feature_ref < n_fu
+    if n_fu:
+        safe_ref = np.minimum(feature_ref, n_fu - 1)
+        feature = np.where(is_split, packed.used_features[safe_ref], -1).astype(np.int32)
+        thr_value = np.where(
+            is_split,
+            packed.thr_table[packed.thr_offsets[safe_ref] + thr_idx],
+            np.float32(0.0),
+        ).astype(np.float32)
+    else:  # a fully-unsplit ensemble uses no features or thresholds at all
+        feature = np.full(feature_ref.shape, -1, np.int32)
+        thr_value = np.zeros(feature_ref.shape, np.float32)
+    thr_idx = np.where(is_split, thr_idx, 0).astype(np.int32)
+    return DecodedModel(
+        n_ensembles=packed.n_ensembles,
+        max_depth=packed.max_depth,
+        n_features=packed.n_features,
+        feature=feature,
+        thr_value=thr_value,
+        is_split=is_split,
+        leaf_ref=packed.leaf_ref.astype(np.int32),
+        leaf_values=packed.leaf_values.astype(np.float32),
+        base_score=packed.base_score.astype(np.float32),
+        used_features=packed.used_features.astype(np.int32),
+        thr_table=packed.thr_table.astype(np.float32),
+        thr_offsets=packed.thr_offsets.astype(np.int32),
+        feature_ref=feature_ref,
+        thr_idx=thr_idx,
     )

@@ -124,7 +124,9 @@ def predict_binned(forest: Forest, bins: jax.Array) -> jax.Array:
         contrib = forest.leaf_values[ref]                       # (n,)
         active = (t_idx < forest.n_trees).astype(contrib.dtype)
         cls = t_idx % C
-        acc = acc + contrib[:, None] * active * jax.nn.one_hot(cls, C, dtype=contrib.dtype)
+        # scatter into the tree's class column — an (n,) dynamic-slice add,
+        # not an (n, C) dense one-hot multiply per tree
+        acc = acc.at[:, cls].add(contrib * active)
         return acc, None
 
     acc0 = jnp.zeros((n, C), dtype=jnp.float32) + forest.base_score[None, :]

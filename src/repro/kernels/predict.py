@@ -38,6 +38,7 @@ def _kernel(
     max_depth: int,
     tidx_bits: int,
     n_ensembles: int,
+    n_fu: int,
 ):
     x = x_ref[...]                     # (TILE, d)
     words = words_ref[...]             # (T, I) uint32
@@ -50,7 +51,6 @@ def _kernel(
 
     T, I = words.shape
     C = n_ensembles
-    n_fu = used_features.shape[0]
     tmask = jnp.uint32((1 << tidx_bits) - 1)
 
     def tree_body(t, acc):
@@ -61,7 +61,7 @@ def _kernel(
             ref = (word >> tidx_bits).astype(jnp.int32)
             tix = (word & tmask).astype(jnp.int32)
             split = ref < n_fu
-            safe = jnp.minimum(ref, n_fu - 1)
+            safe = jnp.minimum(ref, max(n_fu - 1, 0))
             fidx = used_features[safe]                       # (TILE,)
             xv = jnp.take_along_axis(x, fidx[:, None], axis=1)[:, 0]
             thr = thr_table[thr_offsets[safe] + tix]
@@ -101,11 +101,19 @@ def packed_predict(
 ):
     """(n, d) raw floats -> (n, C) ensemble scores from the packed model."""
     n, d = x.shape
+    C = n_ensembles
+    if words.shape[0] == 0:  # zero-tree artifact: base scores only
+        return jnp.broadcast_to(base_score[None, :].astype(jnp.float32), (n, C))
     n_pad = -n % TILE
     if n_pad:
         x = jnp.pad(x, ((0, n_pad), (0, 0)))
     n_tiles = (n + n_pad) // TILE
-    C = n_ensembles
+    n_fu = used_features.shape[0]
+    if n_fu == 0:
+        # fully-unsplit ensemble: pad the gather tables (true |F_U| still
+        # reaches the kernel statically, so no node ever reads as split)
+        used_features = jnp.zeros((1,), jnp.int32)
+        thr_table = jnp.zeros((1,), jnp.float32)
 
     whole = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
     out = pl.pallas_call(
@@ -114,6 +122,7 @@ def packed_predict(
             max_depth=max_depth,
             tidx_bits=tidx_bits,
             n_ensembles=n_ensembles,
+            n_fu=n_fu,
         ),
         grid=(n_tiles,),
         in_specs=[

@@ -63,6 +63,12 @@ def packed_predict_ref(
     C = n_ensembles
     n_fu = used_features.shape[0]
     tmask = jnp.uint32((1 << tidx_bits) - 1)
+    if n_fu == 0:
+        # fully-unsplit ensemble: no feature is ever consulted; pad the
+        # gather tables so traversal stays in bounds (split is always
+        # False and the gathered values are masked out)
+        used_features = jnp.zeros((1,), jnp.int32)
+        thr_table = jnp.zeros((1,), jnp.float32)
 
     def tree_body(t, acc):
         idx = jnp.zeros((n,), jnp.int32)
@@ -72,7 +78,7 @@ def packed_predict_ref(
             ref = (word >> tidx_bits).astype(jnp.int32)
             tix = (word & tmask).astype(jnp.int32)
             split = ref < n_fu
-            safe_ref = jnp.minimum(ref, n_fu - 1)
+            safe_ref = jnp.minimum(ref, max(n_fu - 1, 0))
             fidx = used_features[safe_ref]
             xv = jnp.take_along_axis(x, fidx[:, None], axis=1)[:, 0]
             thr = thr_table[thr_offsets[safe_ref] + tix]
@@ -83,4 +89,6 @@ def packed_predict_ref(
         return acc + v[:, None] * jax.nn.one_hot(cls, C, dtype=v.dtype)
 
     acc = jnp.zeros((n, C), jnp.float32) + base_score[None, :]
+    if T == 0:  # zero-tree artifact: the loop body would trace OOB gathers
+        return acc
     return jax.lax.fori_loop(0, T, tree_body, acc)

@@ -1,11 +1,19 @@
-"""Serving launcher: batched prefill + decode loop.
+"""Serving launcher: one engine per model family behind one CLI.
 
+    # LM path — batched prefill + decode loop:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
         --batch 4 --prompt-len 32 --decode-steps 16
 
-On production meshes the same functions lower against the sequence-sharded
-cache (see launch/dryrun.py decode cells); here the reduced config runs the
-actual loop on CPU to prove the serving path end to end.
+    # GBDT path — the paper's deployed model behind the micro-batching
+    # engine, through any predictor backend:
+    PYTHONPATH=src python -m repro.launch.serve --arch toad-gbdt \
+        --backend packed --requests 2048
+    PYTHONPATH=src python -m repro.launch.serve --arch toad-gbdt \
+        --backend reference --smoke
+
+On production meshes the LM functions lower against the sequence-sharded
+cache (see launch/dryrun.py decode cells); here the reduced configs run the
+actual loops on CPU to prove both serving paths end to end.
 """
 
 from __future__ import annotations
@@ -14,32 +22,25 @@ import argparse
 import time
 
 
-def main():
+def serve_lm(args) -> None:
+    """Batched prefill + decode loop over the LM stack."""
     import jax
+
     import jax.numpy as jnp
 
+    from repro import compat
     from repro.configs import get_config, get_reduced
     from repro.models.registry import get_model
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--decode-steps", type=int, default=16)
-    args = ap.parse_args()
-
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = get_model(cfg)
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     B, S = args.batch, args.prompt_len
     max_seq = S + args.decode_steps
     key = jax.random.PRNGKey(0)
     params = model.init(key)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if cfg.family == "encdec":
             batch = {
                 "frames": jnp.ones((B, S // cfg.frontend_len_div, cfg.d_model), jnp.bfloat16),
@@ -90,6 +91,102 @@ def main():
         print(f"decoded {args.decode_steps} steps x batch {B} in {dt:.2f}s "
               f"({args.decode_steps * B / dt:.1f} tok/s on CPU)")
         print("sample:", toks[0].tolist())
+
+
+def serve_gbdt(args) -> dict:
+    """Train a small ToaD model, compress it, and serve raw-feature requests
+    through the micro-batching engine and the chosen predictor backend."""
+    import threading
+
+    import numpy as np
+
+    from repro.api import GBDTEngine, ToadModel, available_backends, get_backend
+    from repro.configs import get_gbdt_config
+
+    backend = args.backend or "packed"
+    if backend != "auto":
+        get_backend(backend)  # fail fast on a typo'd name, before training
+
+    # always the reduced workload: the full config is the 16.7M-row dry-run
+    # shape, not something to train in-process on a serving host
+    wl = get_gbdt_config(args.arch, reduced=True)
+    n_requests = 256 if args.smoke else args.requests
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(wl.rows, wl.n_features)).astype(np.float32)
+    y = (X[:, 0] - X[:, 1] + 0.3 * X[:, 2] ** 2 > 0).astype(np.float32)
+
+    print(f"training toad-gbdt (rows={wl.rows}, d={wl.n_features}, "
+          f"rounds={wl.gbdt.n_rounds}, depth={wl.gbdt.max_depth}) ...")
+    model = ToadModel(config=wl.gbdt, n_bins=wl.n_bins).fit(X, y).compress()
+    report = model.memory_report()
+    print(f"model: {int(report['n_trees'])} trees, "
+          f"{report['toad_bytes']:.0f} B ToaD stream "
+          f"({report['compression_vs_f32']:.1f}x vs fp32 pointers), "
+          f"ReF={report['reuse_factor']:.2f}")
+    print(f"backend: {backend} (available: {', '.join(available_backends())})")
+
+    engine = GBDTEngine(
+        model, backend=None if backend == "auto" else backend,
+        max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+    )
+    queries = X[rng.integers(0, wl.rows, size=n_requests)]
+    errs = []
+
+    def client(lo: int, hi: int):
+        futs = [engine.submit(queries[i]) for i in range(lo, hi)]
+        out = np.stack([f.result() for f in futs])
+        ref = model.predict(queries[lo:hi], backend="reference")
+        errs.append(float(np.abs(out - ref).max()))
+
+    with engine:
+        threads = [
+            threading.Thread(target=client, args=(c * n_requests // args.clients,
+                                                  (c + 1) * n_requests // args.clients))
+            for c in range(args.clients)
+        ]
+        t0 = time.time()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.time() - t0
+
+    s = engine.stats()
+    max_err = max(errs)
+    print(f"served {s.n_requests} requests in {wall:.2f}s — "
+          f"{s.n_requests / wall:.1f} req/s, mean batch {s.mean_batch:.1f}, "
+          f"p50 {s.latency_p50_ms:.2f} ms, p95 {s.latency_p95_ms:.2f} ms")
+    print(f"parity vs reference backend: max|Δ| = {max_err:.2e}")
+    assert s.n_requests == n_requests and s.n_requests / wall > 0
+    assert max_err <= 1e-5
+    return {**s.as_dict(), "req_per_s": s.n_requests / wall}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    # LM engine
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode-steps", type=int, default=16)
+    # GBDT engine
+    ap.add_argument("--backend", default="auto",
+                    help="predictor backend: auto|reference|packed|pallas")
+    ap.add_argument("--requests", type=int, default=2048)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short run for CI (256 requests)")
+    args = ap.parse_args()
+
+    from repro.configs import is_gbdt_arch
+
+    if is_gbdt_arch(args.arch):
+        serve_gbdt(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

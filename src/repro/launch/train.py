@@ -20,6 +20,8 @@ import argparse
 def train_lm(args):
     import jax
 
+    from repro import compat
+
     from repro.configs import get_config, get_reduced
     from repro.models.registry import get_model
     from repro.train.loop import fit, lm_batch_fn
@@ -27,10 +29,8 @@ def train_lm(args):
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = get_model(cfg)
     batch_fn = lm_batch_fn(cfg, n_docs=1000, seq=args.seq, batch=args.batch)
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
-    with jax.set_mesh(mesh):
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with compat.set_mesh(mesh):
         params, losses = fit(
             model, batch_fn, steps=args.steps,
             ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,

@@ -1,0 +1,284 @@
+"""The ToadModel estimator API: backend parity contract, lifecycle,
+persistence, pack/unpack symmetry, and the micro-batching serve engine."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    GBDTEngine,
+    NotFittedError,
+    ToadModel,
+    available_backends,
+    get_backend,
+    list_backends,
+    resolve_backend,
+)
+from repro.core import from_packed, to_packed
+from repro.gbdt import Forest, apply_bins, empty_forest, predict_binned, predict_raw
+
+TASKS = [("regression", 0), ("binary", 0), ("multiclass", 3)]
+
+
+def _data(rng, task, n=400, d=6):
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    if task == "regression":
+        y = X[:, 0] * 2 + np.sin(X[:, 1])
+    elif task == "binary":
+        y = (X[:, 0] + X[:, 1] ** 2 > 0.7).astype(np.float32)
+    else:
+        y = np.digitize(X[:, 0], [-0.5, 0.5]).astype(np.float32)
+    return X, y.astype(np.float32)
+
+
+def _fit(rng, task, n_classes, **over):
+    X, y = _data(rng, task)
+    kw = dict(n_rounds=10, max_depth=3, learning_rate=0.3,
+              toad_penalty_feature=1.0, toad_penalty_threshold=0.5)
+    kw.update(over)
+    model = ToadModel(task=task, n_classes=n_classes, n_bins=16, **kw)
+    return model.fit(X, y), X, y
+
+
+# --------------------------------------------------------------- parity
+@pytest.mark.parametrize("task,n_classes", TASKS)
+def test_backend_parity_contract(rng, task, n_classes):
+    """Every backend available on this platform must agree with the
+    training-side oracle predict_raw to <= 1e-5 (acceptance contract)."""
+    model, X, _ = _fit(rng, task, n_classes)
+    model.compress()
+    ref = np.asarray(predict_raw(model.forest, jnp.asarray(X)))
+    assert available_backends(), "no backends registered"
+    for name in available_backends():
+        if name == "pallas" and jax.default_backend() != "tpu":
+            continue  # covered (interpret mode) by test_pallas_backend_interpret
+        out = model.predict(X, backend=name)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"backend {name}")
+
+
+def test_pallas_backend_interpret(rng):
+    """One small case through the Pallas kernel (interpret mode off-TPU)."""
+    model, X, _ = _fit(rng, "binary", 0, n_rounds=4, max_depth=2)
+    ref = np.asarray(predict_raw(model.forest, jnp.asarray(X[:64])))
+    out = model.predict(X[:64], backend="pallas")
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_parity_with_unsplit_trees(rng):
+    """A forest where one per-class tree never split must predict
+    identically through every backend (the no-split sentinel path)."""
+    D, C = 2, 2
+    f = empty_forest(n_features=3, n_edges=4, tree_capacity=4, max_depth=D,
+                     leaf_capacity=8, n_ensembles=C)
+    edges = jnp.asarray(
+        np.array([[-0.5, 0.0, 0.5, np.inf]] * 3, np.float32)
+    )
+    forest = dataclasses.replace(
+        f,
+        edges=edges,
+        # tree 0 (class 0): root split on feature 1 @ edge 2; children unsplit
+        feature=f.feature.at[0, 0].set(1),
+        thr_bin=f.thr_bin.at[0, 0].set(2),
+        is_split=f.is_split.at[0, 0].set(True),
+        # trees 1..3 stay fully unsplit (tree 1 = class 1 of round 0)
+        leaf_ref=jnp.asarray(
+            np.array([[1, 1, 2, 2], [3, 3, 3, 3], [0, 0, 0, 0], [3, 3, 3, 3]],
+                     np.int32)
+        ),
+        leaf_values=f.leaf_values.at[:4].set(jnp.asarray([0.0, -1.5, 2.5, 0.25])),
+        n_leaf_values=jnp.asarray(4, jnp.int32),
+        n_trees=jnp.asarray(4, jnp.int32),
+        base_score=jnp.asarray([0.1, -0.2], jnp.float32),
+    )
+    model = ToadModel.from_forest(forest).compress()
+    X = rng.normal(size=(100, 3)).astype(np.float32)
+    ref = np.asarray(predict_raw(forest, jnp.asarray(X)))
+    # the unsplit class-1 ensemble contributes a constant
+    assert np.allclose(ref[:, 1], -0.2 + 0.25 + 0.25)
+    for name in ("reference", "packed", "pallas"):
+        np.testing.assert_allclose(model.predict(X, backend=name), ref,
+                                   rtol=1e-5, atol=1e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("task,n_classes", TASKS)
+def test_predict_matches_predict_binned(rng, task, n_classes):
+    model, X, _ = _fit(rng, task, n_classes)
+    bins = apply_bins(jnp.asarray(X), model.forest.edges)
+    np.testing.assert_allclose(
+        model.predict(X), np.asarray(predict_binned(model.forest, bins)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+# ------------------------------------------------------------- lifecycle
+def test_registry_and_resolution():
+    assert {"reference", "packed", "pallas"} <= set(list_backends())
+    assert get_backend("reference").requires_compressed is False
+    with pytest.raises(KeyError):
+        get_backend("nope")
+    # auto-selection: uncompressed -> reference; compressed -> packed on CPU
+    assert resolve_backend(None, compressed=False).name == "reference"
+    expected = "pallas" if jax.default_backend() == "tpu" else "packed"
+    assert resolve_backend(None, compressed=True).name == expected
+
+
+def test_packed_backend_autocompresses(rng):
+    model, X, _ = _fit(rng, "regression", 0)
+    assert not model.is_compressed
+    model.predict(X, backend="packed")  # implicit compress()
+    assert model.is_compressed
+
+
+def test_unfitted_raises():
+    with pytest.raises(NotFittedError):
+        ToadModel().predict(np.zeros((1, 3), np.float32))
+    with pytest.raises(NotFittedError):
+        ToadModel().compress()
+
+
+def test_proba_label_score(rng):
+    model, X, y = _fit(rng, "binary", 0)
+    p = model.predict_proba(X)
+    assert p.shape == (len(X), 2)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, rtol=1e-6)
+    labels = model.predict_label(X)
+    assert set(np.unique(labels)) <= {0, 1}
+    assert model.score(X, y) > 0.8
+    with pytest.raises(ValueError):
+        _fit(rng, "regression", 0)[0].predict_proba(X)
+
+
+def test_memory_report(rng):
+    model, _, _ = _fit(rng, "regression", 0)
+    rep = model.memory_report()
+    assert rep["toad_bytes"] < rep["pointer_f32_bytes"]
+    assert rep["reuse_factor"] >= 1.0
+    model.compress()
+    rep = model.memory_report()
+    assert rep["encoded_stream_bytes"] == rep["toad_bytes"]
+    # trainer's in-jit accounting must equal the encoder's stream exactly
+    assert rep["trainer_accounted_bytes"] == rep["toad_bytes"]
+
+
+def test_save_load_roundtrip(rng, tmp_path):
+    model, X, _ = _fit(rng, "multiclass", 3)
+    model.compress()
+    ref = model.predict(X)
+    path = model.save(str(tmp_path / "m.npz"))
+    restored = ToadModel.load(path)
+    assert restored.is_compressed
+    assert restored.config == model.config
+    np.testing.assert_allclose(restored.predict(X), ref, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        restored.predict(X, backend="packed"), ref, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_pack_unpack_symmetry(rng):
+    """to_packed(from_packed(p)) reproduces every field bit for bit."""
+    model, _, _ = _fit(rng, "binary", 0)
+    p = model.compress().packed
+    p2 = to_packed(from_packed(p))
+    for field in ("words", "leaf_ref", "leaf_values", "thr_table",
+                  "thr_offsets", "used_features", "base_score"):
+        np.testing.assert_array_equal(getattr(p2, field), getattr(p, field),
+                                      err_msg=field)
+    assert (p2.n_ensembles, p2.max_depth, p2.tidx_bits, p2.fu_bits, p2.n_features) \
+        == (p.n_ensembles, p.max_depth, p.tidx_bits, p.fu_bits, p.n_features)
+    # and the unpacked model predicts like the original decoded model
+    X = rng.normal(size=(50, p.n_features)).astype(np.float32)
+    np.testing.assert_allclose(from_packed(p).predict(X), model.decoded.predict(X),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_roundtrip_zero_split_forest(rng):
+    """A forest with no splits at all (|F_U| = 0) must survive the whole
+    compress -> from_packed -> predict pipeline (base scores only)."""
+    f = empty_forest(n_features=3, n_edges=4, tree_capacity=2, max_depth=2,
+                     leaf_capacity=4, n_ensembles=1)
+    f = dataclasses.replace(f, base_score=jnp.asarray([0.75], jnp.float32))
+    model = ToadModel.from_forest(f).compress()
+    p = model.packed
+    p2 = to_packed(from_packed(p))
+    np.testing.assert_array_equal(p2.words, p.words)
+    X = rng.normal(size=(20, 3)).astype(np.float32)
+    for name in ("reference", "packed", "pallas"):
+        out = model.predict(X, backend=name)
+        np.testing.assert_allclose(out, 0.75, rtol=1e-6, err_msg=name)
+
+
+def test_fit_binned_matches_fit(rng):
+    from repro.gbdt import fit_bins
+
+    X, y = _data(rng, "regression")
+    cfg = dict(n_rounds=6, max_depth=2, learning_rate=0.3)
+    m1 = ToadModel(task="regression", n_bins=16, **cfg).fit(X, y)
+    edges = jnp.asarray(fit_bins(X, 16))
+    bins = apply_bins(jnp.asarray(X), edges)
+    m2 = ToadModel(task="regression", n_bins=16, **cfg).fit_binned(bins, y, edges)
+    np.testing.assert_allclose(m1.predict(X), m2.predict(X), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------- engine
+def test_engine_serves_with_parity(rng):
+    model, X, _ = _fit(rng, "binary", 0)
+    model.compress()
+    ref = model.predict(X[:128], backend="reference")
+    engine = GBDTEngine(model, backend="packed", max_batch=32, max_wait_ms=1.0)
+    with engine:
+        futs = [engine.submit(X[i]) for i in range(128)]
+        out = np.stack([f.result() for f in futs])
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    s = engine.stats()
+    assert s.n_requests == 128
+    assert s.req_per_s > 0
+    assert s.n_batches <= 128  # batching actually happened under load
+    assert s.latency_p95_ms >= s.latency_p50_ms
+
+
+def test_engine_direct_predict(rng):
+    model, X, _ = _fit(rng, "regression", 0)
+    engine = GBDTEngine(model, backend="reference", max_batch=16)
+    np.testing.assert_allclose(
+        engine.predict(X[:32]), model.predict(X[:32]), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_engine_propagates_predict_errors(rng):
+    """A raising predict_fn must fail the batch's futures, not strand them."""
+    from repro.api import MicroBatchEngine
+
+    def bad_predict(x):
+        if x.any():  # warmup uses zeros; real requests use ones
+            raise ValueError("boom")
+        return np.zeros((x.shape[0], 1), np.float32)
+
+    engine = MicroBatchEngine(bad_predict, 4, max_batch=8, max_wait_ms=5.0)
+    with engine:
+        futs = [engine.submit(np.ones(4)) for _ in range(16)]
+        for f in futs:
+            with pytest.raises(ValueError, match="boom"):
+                f.result(timeout=5)
+
+
+def test_engine_submit_requires_start(rng):
+    model, X, _ = _fit(rng, "regression", 0)
+    engine = GBDTEngine(model, backend="reference")
+    with pytest.raises(RuntimeError):
+        engine.submit(X[0])
+
+
+def test_serve_gbdt_smoke():
+    """The acceptance smoke: the serve CLI path reports > 0 req/s."""
+    import argparse
+
+    from repro.launch.serve import serve_gbdt
+
+    ns = argparse.Namespace(arch="toad-gbdt", backend="reference", requests=128,
+                            clients=2, max_batch=64, max_wait_ms=1.0, smoke=True)
+    out = serve_gbdt(ns)
+    assert out["req_per_s"] > 0

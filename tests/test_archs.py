@@ -3,6 +3,8 @@ CPU, asserting output shapes + no NaNs; plus decode-vs-prefill parity for
 one arch per family."""
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -35,7 +37,7 @@ def test_smoke_train_step(name, mesh11):
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     batch = _batch(cfg)
-    with jax.set_mesh(mesh11):
+    with compat.set_mesh(mesh11):
         loss, grads = jax.jit(
             lambda p, b: jax.value_and_grad(lambda q: model.train_loss(q, b))(p)
         )(params, batch)
@@ -50,7 +52,7 @@ def test_smoke_prefill_decode(name, mesh11):
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     batch = _batch(cfg, with_labels=False)
-    with jax.set_mesh(mesh11):
+    with compat.set_mesh(mesh11):
         logits, cache = jax.jit(lambda p, b: model.prefill(p, b))(params, batch)
         assert logits.shape == (B, cfg.padded_vocab)
         assert bool(jnp.all(jnp.isfinite(logits[:, : cfg.vocab])))
@@ -78,7 +80,7 @@ def test_decode_matches_prefill(name, mesh11):
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(1))
     toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
-    with jax.set_mesh(mesh11):
+    with compat.set_mesh(mesh11):
         logits, cache = jax.jit(lambda p, b: model.prefill(p, b))(params, {"tokens": toks})
 
         def grow(x):
@@ -154,7 +156,7 @@ def test_int8_kv_cache_parity(mesh11):
         model = get_model(cfg)
         params = model.init(jax.random.PRNGKey(1))
         toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
-        with jax.set_mesh(mesh11):
+        with compat.set_mesh(mesh11):
             logits, cache = jax.jit(lambda p, b: model.prefill(p, b))(
                 params, {"tokens": toks}
             )

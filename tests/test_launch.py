@@ -2,6 +2,8 @@
 collective parsing, probe algebra, and a tiny-mesh lower+compile."""
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -70,8 +72,7 @@ def test_tiny_mesh_lower_compile_train():
     from repro.train.optimizer import get_optimizer
 
     cfg = get_reduced("qwen3-4b")
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 2), ("data", "model"))
     model = get_model(cfg)
     pshapes, pspecs = model.abstract_init()
     opt = get_optimizer(cfg.optimizer, cfg.learning_rate)
@@ -87,7 +88,7 @@ def test_tiny_mesh_lower_compile_train():
     }
     bspecs = {"tokens": P(("data",), None), "labels": P(("data",), None)}
     fn = make_train_step(model, opt, ("data",))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(
             fn,
             in_shardings=(nsh(pspecs), nsh(ospecs), NamedSharding(mesh, P()), nsh(bspecs)),
@@ -103,15 +104,14 @@ def test_tiny_mesh_lower_compile_decode():
     from repro.models.registry import get_model
 
     cfg = get_reduced("qwen3-4b")
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 2), ("data", "model"))
     model = get_model(cfg)
     pshapes, pspecs = model.abstract_init()
     cshapes, cspecs = model.abstract_cache(4, 64)
     nsh = lambda spec: jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec, is_leaf=lambda x: isinstance(x, P)
     )
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         fn = lambda params, cache, token, p: model.decode_step(
             mesh, params, cache, token, p, ("data",)
         )
