@@ -1,0 +1,324 @@
+"""Training/serving hot-path microbench -> BENCH_train.json / BENCH_predict.json.
+
+Tracks the perf trajectory PR-over-PR (ROADMAP north star: "fast as the
+hardware allows").  Two artifacts are written at the *repo root* (not
+results/) so they are committed alongside the code that produced them and
+become the regression baseline for the next PR:
+
+  * ``BENCH_train.json``  — per-level histogram step (ref vs fused vs
+    sibling-subtraction vs pallas-on-TPU) + end-to-end ``train_jit`` on the
+    old path (segment-sum, no subtraction) vs the new default.
+  * ``BENCH_predict.json`` — per-row predict latency through the
+    ``ToadModel`` backends; the Pallas kernel row is only timed on a real
+    TPU (interpret mode is a correctness path, never a latency number).
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_train.py --smoke          # CI size
+    PYTHONPATH=src python benchmarks/bench_train.py                  # full size
+    PYTHONPATH=src python benchmarks/bench_train.py --smoke --check  # perf gate
+
+``--check`` compares against the *committed* baselines before overwriting
+them and exits non-zero if the train step or the predict call regressed
+more than ``CHECK_FACTOR`` (2x) — the CI ``bench-smoke`` gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)  # the benchmarks package itself
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CHECK_FACTOR = 2.0
+#: (artifact, path into the payload) pairs gated by --check.  Absolute
+#: wall-clock comparisons; CHECK_FACTOR doubles as headroom for runner-speed
+#: differences between the committing machine and CI.
+CHECK_KEYS = [
+    ("BENCH_train.json", ("train", "new_path_step_ms")),
+    ("BENCH_train.json", ("hist_level", "new_ms")),
+    ("BENCH_predict.json", ("predict", "packed_us_per_row")),
+]
+#: machine-independent in-run ratios that must stay above a floor — these
+#: catch a histogram-path regression even when absolute timings are
+#: incomparable across runners (floor < the 1.5x acceptance bar to absorb
+#: runner noise, not to excuse a real regression).
+RATIO_FLOORS = [
+    ("BENCH_train.json", ("hist_level", "speedup_ref_over_new"), 1.2),
+    ("BENCH_train.json", ("train", "speedup_old_over_new"), 1.0),
+]
+
+
+def _timer(fn, *args, reps=10, warmup=2):
+    """Min-of-reps: these numbers are committed regression baselines, so
+    run-to-run stability beats capturing average load."""
+    from benchmarks.common import timer
+
+    return timer(fn, *args, reps=reps, warmup=warmup, reduce="min")
+
+
+def _dig(payload, path):
+    for k in path:
+        payload = payload[k]
+    return payload
+
+
+def bench_histogram_level(n, d, n_bins, n_nodes, verbose=True):
+    """Time one level's histogram step: old ref path vs the new dispatch."""
+    from repro.kernels.ops import (
+        build_histogram,
+        default_hist_method,
+        sibling_subtraction_histograms,
+    )
+
+    rng = np.random.default_rng(0)
+    bins = jnp.asarray(rng.integers(0, n_bins, (n, d)), jnp.int8)
+    gh = jnp.asarray(
+        np.stack(
+            [rng.normal(size=n), rng.uniform(0.1, 1.0, n), np.ones(n)], axis=-1
+        ),
+        jnp.float32,
+    )
+    pos = jnp.asarray(rng.integers(0, n_nodes, (n,)), jnp.int32)
+
+    ref = jax.jit(
+        lambda b, g, p: build_histogram(
+            b, g, p, n_nodes=n_nodes, n_bins=n_bins, method="ref"
+        )
+    )
+    fused = jax.jit(
+        lambda b, g, p: build_histogram(
+            b, g, p, n_nodes=n_nodes, n_bins=n_bins, method="fused"
+        )
+    )
+    # the trainer's level>=1 path: left children only + parent - left,
+    # through the same auto dispatch the trainer uses on this backend
+    parent = jax.jit(
+        lambda b, g, p: build_histogram(
+            b, g, p // 2, n_nodes=n_nodes // 2, n_bins=n_bins, method=None
+        )
+    )(bins, gh, pos)
+    subtract = jax.jit(
+        lambda b, g, p, ph: sibling_subtraction_histograms(
+            b, g, p, ph, n_bins=n_bins, method=None
+        )
+    )
+
+    t_ref = _timer(ref, bins, gh, pos)
+    t_fused = _timer(fused, bins, gh, pos)
+    t_sub = _timer(subtract, bins, gh, pos, parent)
+    out = {
+        "shape": {"n": n, "d": d, "n_bins": n_bins, "n_nodes": n_nodes},
+        "ref_ms": t_ref * 1e3,
+        "fused_ms": t_fused * 1e3,
+        "subtract_auto_ms": t_sub * 1e3,
+        # the path the trainer actually takes at levels >= 1 on this backend
+        "new_ms": t_sub * 1e3,
+        "speedup_ref_over_new": t_ref / t_sub,
+        "auto_method": default_hist_method(),
+    }
+    if jax.default_backend() == "tpu":
+        pallas = jax.jit(
+            lambda b, g, p: build_histogram(
+                b, g, p, n_nodes=n_nodes, n_bins=n_bins, method="pallas"
+            )
+        )
+        out["pallas_ms"] = _timer(pallas, bins, gh, pos) * 1e3
+    else:
+        out["pallas"] = {"status": "skipped (interpret)"}
+    if verbose:
+        print(
+            f"[hist level] ref {out['ref_ms']:.1f}ms  fused {out['fused_ms']:.1f}ms  "
+            f"{out['auto_method']}+subtract {out['subtract_auto_ms']:.1f}ms  "
+            f"-> {out['speedup_ref_over_new']:.2f}x",
+            flush=True,
+        )
+    return out
+
+
+def bench_train(n, d, n_bins, depth, rounds, verbose=True):
+    """End-to-end train_jit: old histogram path vs the new default."""
+    import dataclasses
+
+    from repro.gbdt import GBDTConfig, apply_bins, fit_bins, train_jit
+
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (1.2 * X[:, 0] - X[:, 1] + 0.4 * X[:, 2] * X[:, 3] > 0).astype(np.float32)
+    edges = jnp.asarray(fit_bins(X, n_bins))
+    bins = apply_bins(jnp.asarray(X), edges).astype(jnp.int8)
+    y = jnp.asarray(y)
+
+    new_cfg = GBDTConfig(
+        task="binary", n_rounds=rounds, max_depth=depth,
+        toad_penalty_feature=1.0, toad_penalty_threshold=0.25,
+    )
+    old_cfg = dataclasses.replace(new_cfg, hist_method="ref", hist_subtract=False)
+
+    run = lambda cfg: jax.block_until_ready(train_jit(cfg, bins, y, edges)[2]["preds"])
+    t_old = _timer(run, old_cfg, reps=2, warmup=1)
+    t_new = _timer(run, new_cfg, reps=2, warmup=1)
+    out = {
+        "shape": {"n": n, "d": d, "n_bins": n_bins, "max_depth": depth,
+                  "n_rounds": rounds},
+        "old_path_ms": t_old * 1e3,
+        "new_path_ms": t_new * 1e3,
+        "old_path_step_ms": t_old * 1e3 / rounds,
+        "new_path_step_ms": t_new * 1e3 / rounds,
+        "speedup_old_over_new": t_old / t_new,
+    }
+    if verbose:
+        print(
+            f"[train e2e] old {t_old*1e3:.0f}ms  new {t_new*1e3:.0f}ms  "
+            f"-> {out['speedup_old_over_new']:.2f}x",
+            flush=True,
+        )
+    return out
+
+
+def bench_predict(n, d, n_bins, depth, rounds, n_query, verbose=True):
+    """Per-row predict latency through the ToadModel backends."""
+    from repro.api import ToadModel
+
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (X[:, 0] - X[:, 1] > 0).astype(np.float32)
+    model = ToadModel(
+        task="binary", n_bins=n_bins, n_rounds=rounds, max_depth=depth,
+        toad_penalty_feature=2.0, toad_penalty_threshold=0.5,
+    ).fit(X, y).compress()
+    Xq = jnp.asarray(rng.normal(size=(n_query, d)).astype(np.float32))
+
+    t_ref = _timer(model.predictor("reference"), Xq)
+    t_packed = _timer(model.predictor("packed"), Xq)
+    out = {
+        "shape": {"n_query": n_query, "d": d, "max_depth": depth,
+                  "n_trees": rounds},
+        "reference_us_per_row": t_ref / n_query * 1e6,
+        "packed_us_per_row": t_packed / n_query * 1e6,
+    }
+    if jax.default_backend() == "tpu":
+        t_pal = _timer(model.predictor("pallas"), Xq)
+        out["pallas_us_per_row"] = t_pal / n_query * 1e6
+    else:
+        out["pallas"] = {"status": "skipped (interpret)"}
+    if verbose:
+        print(
+            f"[predict] reference {out['reference_us_per_row']:.1f}us/row  "
+            f"packed {out['packed_us_per_row']:.1f}us/row",
+            flush=True,
+        )
+    return out
+
+
+def _load_baseline(name):
+    path = os.path.join(ROOT, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _write(name, payload):
+    with open(os.path.join(ROOT, name), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+        f.write("\n")
+
+
+def run(smoke=True, check=False, verbose=True):
+    if smoke:
+        n, d, n_bins, depth, rounds = 20_000, 32, 64, 4, 8
+        n_query = 20_000
+    else:
+        n, d, n_bins, depth, rounds = 100_000, 54, 64, 5, 16
+        n_query = 50_000
+
+    baselines = {name: _load_baseline(name) for name, _ in CHECK_KEYS}
+    meta = {
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "device": str(jax.devices()[0]),
+    }
+
+    train_payload = {
+        "meta": meta,
+        "hist_level": bench_histogram_level(
+            n, d, n_bins, n_nodes=2 ** (depth - 1), verbose=verbose
+        ),
+        "train": bench_train(n, d, n_bins, depth, rounds, verbose=verbose),
+    }
+    _write("BENCH_train.json", train_payload)
+
+    predict_payload = {
+        "meta": meta,
+        "predict": bench_predict(n, d, n_bins, depth, rounds, n_query, verbose=verbose),
+    }
+    _write("BENCH_predict.json", predict_payload)
+    payloads = {"BENCH_train.json": train_payload, "BENCH_predict.json": predict_payload}
+
+    failures = []
+    baseline_compared = 0
+    for name, path in CHECK_KEYS:
+        base = baselines.get(name)
+        if base is None:
+            print(f"[check] {name}: no committed baseline, skipping", flush=True)
+            continue
+        if base.get("meta", {}).get("smoke") != smoke:
+            print(f"[check] {name}: baseline is a different size "
+                  f"(smoke={base.get('meta', {}).get('smoke')}), skipping", flush=True)
+            continue
+        try:
+            old_v = float(_dig(base, path))
+        except (KeyError, TypeError):
+            print(f"[check] {name}:{'.'.join(path)}: baseline predates this key, "
+                  "skipping", flush=True)
+            continue
+        new_v = float(_dig(payloads[name], path))
+        baseline_compared += 1
+        ratio = new_v / old_v if old_v > 0 else 1.0
+        status = "FAIL" if ratio > CHECK_FACTOR else "ok"
+        if verbose or status == "FAIL":
+            print(f"[check] {name}:{'.'.join(path)}  {old_v:.3f} -> {new_v:.3f} "
+                  f"({ratio:.2f}x)  {status}", flush=True)
+        if status == "FAIL":
+            failures.append((name, path, ratio))
+
+    # machine-independent floors: same-run ratios, no baseline needed
+    for name, path, floor in RATIO_FLOORS:
+        val = float(_dig(payloads[name], path))
+        status = "FAIL" if val < floor else "ok"
+        if verbose or status == "FAIL":
+            print(f"[check] {name}:{'.'.join(path)}  {val:.2f} "
+                  f"(floor {floor:.2f})  {status}", flush=True)
+        if status == "FAIL":
+            failures.append((name, path, val))
+
+    if check and failures:
+        print(f"perf gate: {len(failures)} metric(s) regressed "
+              f"(>{CHECK_FACTOR}x vs baseline or below in-run floor)", flush=True)
+        return 1
+    if check and baseline_compared == 0:
+        print("perf gate: no baseline metric was comparable — commit BENCH_*.json "
+              "baselines produced by a --smoke run", flush=True)
+        return 1
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on >2x regression vs committed BENCH_*.json")
+    args = ap.parse_args()
+    sys.exit(run(smoke=args.smoke, check=args.check))
+
+
+if __name__ == "__main__":
+    main()

@@ -76,13 +76,17 @@ def best_under_limit(bytes_arr, metric_arr, limit, accepted):
     return float(np.nanmax(metric_arr[ok]))
 
 
-def timer(fn, *args, reps=5, warmup=2):
+def timer(fn, *args, reps=5, warmup=2, reduce="mean"):
+    """Time fn(*args).  reduce="mean" reports average load; "min" is robust
+    to scheduler noise (use it for committed regression baselines)."""
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
-    t0 = time.perf_counter()
+    times = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = fn(*args)
         if hasattr(out, "block_until_ready"):
             out.block_until_ready()
-    return (time.perf_counter() - t0) / reps
+        times.append(time.perf_counter() - t0)
+    return min(times) if reduce == "min" else sum(times) / reps

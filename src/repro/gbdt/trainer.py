@@ -22,6 +22,22 @@ the greedy always-positive-gain property.
 Everything is fixed-shape, so the whole trainer can be `jax.vmap`-ed over
 (ι, ξ, forestsize) — the paper's 676-model grid searches are a single
 batched jit call (see benchmarks/fig7_multivariate.py).
+
+Histogram hot path (§Perf): per level the (nodes, d, B, 3) histograms come
+from the pluggable ``repro.kernels.ops.build_histogram`` dispatch
+(``hist_method``: auto = fused matmul path on CPU/GPU, Pallas MXU kernel on
+TPU; "ref" keeps the segment-sum oracle).  At every level >= 1 only *left*
+children are histogrammed and each right child is derived from the cached
+parent level as ``parent − left`` (LightGBM's sibling subtraction,
+``hist_subtract``) — half the histogram work and, data-parallel, half the
+per-level all-reduce bytes (with quantized collectives the subtraction is
+disabled so per-level quantization error cannot compound through derived
+right children).  ``hist_dtype="bf16"`` is a numerics-ablation knob: it
+rounds the g/h channels to bf16 before accumulation, but accumulation is
+always fp32 and the count channel is never rounded, so
+``min_child_samples``/``min_child_weight`` gating stays exact.  (It no
+longer shrinks memory or wire bytes — use ``hist_quant_bits`` for cheap
+histogram collectives.)
 """
 
 from __future__ import annotations
@@ -35,6 +51,7 @@ import jax.numpy as jnp
 from repro.core.memory import toad_bits
 from repro.gbdt.forest import Forest
 from repro.gbdt.losses import make_loss
+from repro.kernels.ops import build_histogram, sibling_subtraction_histograms
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,7 +72,10 @@ class GBDTConfig:
     leaf_match_tol: float = 0.0       # reuse tolerance (0 = exact match)
     leaf_quant: float = 0.0           # optional leaf rounding grid
     cegb_penalty_split: float = 0.0   # CEGB (Peter et al.) per-split cost × n_node/n
-    hist_dtype: str = "f32"           # f32 | bf16 histogram accumulation (§Perf)
+    hist_dtype: str = "f32"           # f32 | bf16 g/h rounding (numerics
+                                      # ablation); counts always exact f32
+    hist_method: str = "auto"         # auto | ref | fused | pallas (kernels.ops)
+    hist_subtract: bool = True        # sibling subtraction at levels >= 1
 
     @property
     def n_ensembles(self) -> int:
@@ -70,6 +90,7 @@ def _grow_tree(cfg: GBDTConfig, bins, g, h, edges, state, reduce_fn=None):
       identity when None.
     """
     used_feat, used_thr, leaf_values, n_leaf, pen_f, pen_t = state
+    shard_reduce = reduce_fn  # None = single-shard training
     reduce_fn = reduce_fn or (lambda x: x)
     n, d = bins.shape
     E = edges.shape[1]
@@ -88,50 +109,64 @@ def _grow_tree(cfg: GBDTConfig, bins, g, h, edges, state, reduce_fn=None):
     dead = jnp.zeros((1,), bool)
     n_splits = jnp.zeros((), jnp.int32)
 
+    # Loop-invariant histogram inputs, hoisted out of the level loop.  bins
+    # keep their storage dtype (int8 preferred: 4x less HBM traffic than
+    # int32 — §Perf); the upcast fuses into each method's id computation.
+    # hist_dtype="bf16" rounds g/h here (numerics ablation only);
+    # accumulation stays fp32 and the count channel is exact regardless.
+    hdt = jnp.bfloat16 if cfg.hist_dtype == "bf16" else jnp.float32
+    gh = jnp.stack(
+        [
+            g.astype(hdt).astype(jnp.float32),
+            h.astype(hdt).astype(jnp.float32),
+            jnp.ones((n,), jnp.float32),
+        ],
+        axis=-1,
+    )  # (n, 3)
+    hist_method = None if cfg.hist_method == "auto" else cfg.hist_method
+    parent_hist = None
+
     for level in range(D):
         n_nodes = 2**level
         base_idx = n_nodes - 1
         node_local = pos - base_idx  # (n,) in [0, n_nodes)
 
         # --- gradient/hessian/count histograms: (nodes, d, B, 3) -----------
-        # bins may be int8 (4x less HBM traffic than int32 — §Perf); the
-        # upcast fuses into the id computation.
-        ids = (
-            node_local[:, None] * (d * B)
-            + jnp.arange(d, dtype=jnp.int32)[None, :] * B
-            + bins.astype(jnp.int32)
-        ).reshape(-1)
-        hdt = jnp.bfloat16 if cfg.hist_dtype == "bf16" else jnp.float32
-        data = jnp.stack(
-            [
-                jnp.broadcast_to(g[:, None], (n, d)).reshape(-1),
-                jnp.broadcast_to(h[:, None], (n, d)).reshape(-1),
-                jnp.ones((n * d,), jnp.float32),
-            ],
-            axis=-1,
-        ).astype(hdt)
-        hist = jax.ops.segment_sum(data, ids, num_segments=n_nodes * d * B)
-        # data-parallel training: one all-reduce of the (nodes, d, B, 3)
-        # histogram per level — the distributed-LightGBM pattern.
-        hist = reduce_fn(hist.reshape(n_nodes, d, B, 3)).astype(jnp.float32)
+        # data-parallel training: one all-reduce of the histogram per level
+        # (left children only under sibling subtraction) — the
+        # distributed-LightGBM pattern.
+        if level >= 1 and cfg.hist_subtract:
+            hist = sibling_subtraction_histograms(
+                bins, gh, node_local, parent_hist, n_bins=B,
+                method=hist_method, reduce_fn=shard_reduce,
+            )
+        else:
+            hist = reduce_fn(
+                build_histogram(
+                    bins, gh, node_local, n_nodes=n_nodes, n_bins=B,
+                    method=hist_method,
+                )
+            )
+        parent_hist = hist
         G, H, CNT = hist[..., 0], hist[..., 1], hist[..., 2]
 
         # --- standard gain for every (node, feature, edge) ------------------
         GL = jnp.cumsum(G, axis=-1)[..., :E]
         HL = jnp.cumsum(H, axis=-1)[..., :E]
         CL = jnp.cumsum(CNT, axis=-1)[..., :E]
-        totG = jnp.sum(G, axis=-1)  # (nodes, d) — identical across d
-        totH = jnp.sum(H, axis=-1)
-        totC = jnp.sum(CNT, axis=-1)
-        GR = totG[..., None] - GL
-        HR = totH[..., None] - HL
-        CR = totC[..., None] - CL
+        # node totals are identical across features — reduce feature 0 once
+        totG = jnp.sum(G[:, 0, :], axis=-1)  # (nodes,)
+        totH = jnp.sum(H[:, 0, :], axis=-1)
+        totC = jnp.sum(CNT[:, 0, :], axis=-1)
+        GR = totG[:, None, None] - GL
+        HR = totH[:, None, None] - HL
+        CR = totC[:, None, None] - CL
         gain = (
             0.5
             * (
                 GL**2 / (HL + lam)
                 + GR**2 / (HR + lam)
-                - (totG[..., None] ** 2) / (totH[..., None] + lam)
+                - (totG**2 / (totH + lam))[:, None, None]
             )
             - cfg.gamma
         )
@@ -150,7 +185,7 @@ def _grow_tree(cfg: GBDTConfig, bins, g, h, edges, state, reduce_fn=None):
             pen = pen_f * (~used_feat[:, None]) + pen_t * (~used_thr)
             # CEGB (Peter et al. 2017): per-split evaluation cost scaled by
             # the fraction of samples that must traverse this node.
-            split_cost = cfg.cegb_penalty_split * totC[j, 0] / n
+            split_cost = cfg.cegb_penalty_split * totC[j] / n
             eff = jnp.where(valid[j], gain[j] - pen - split_cost, -jnp.inf)
             flat = jnp.argmax(eff)
             f = (flat // E).astype(jnp.int32)
@@ -284,6 +319,11 @@ def train(
         from repro.distributed.collectives import quantized_psum
 
         reduce_fn = lambda x: quantized_psum(x, axis_name, bits=hist_quant_bits)
+        # sibling subtraction would derive right children from histograms that
+        # were quantized once per level, compounding quantization error along
+        # right-descending paths (up to max_depth quantization events); with
+        # lossy collectives, quantize each level's full histogram exactly once.
+        cfg = dataclasses.replace(cfg, hist_subtract=False)
     else:
         reduce_fn = lambda x: jax.lax.psum(x, axis_name)
 

@@ -1,28 +1,122 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd public wrappers around the Pallas kernels + the histogram dispatch.
 
 ``interpret`` defaults to True off-TPU (the container is CPU-only); on a
 real TPU backend the compiled kernels run natively.  ``predict_packed_model``
 is the deployment entry point: it takes the artifact produced by
 ``repro.core.to_packed`` directly.
+
+Histogram dispatch
+------------------
+
+``build_histogram`` selects one of three parity-contracted implementations
+(every path matches ``ref`` to <= 1e-5, fp32 accumulation, and samples with
+``pos >= n_nodes`` are dropped — the sentinel all three paths share; for
+masking *within* range zero the channels instead, as
+``sibling_subtraction_histograms`` does):
+
+  method     executes                               selected by "auto" when
+  ---------  -------------------------------------  -----------------------
+  "ref"      jax.ops.segment_sum over an (n·d, CH)  never (oracle only)
+             scratch array (scatter-add)
+  "fused"    per-feature one-hot dot_general, no    CPU / GPU backends
+             n·d-row materialization
+  "pallas"   MXU one-hot kernel (histogram.py)      TPU backend
+
+Why: XLA lowers segment_sum to a serial scatter on CPU, so the "ref" path
+is dominated by n·d scatter rows; "fused" turns the same reduction into d
+dense (B, n) @ (n, nodes*CH) matmuls.  On TPU the Pallas kernel keeps the
+one-hot contraction on the MXU with explicit tiling (off-TPU it only runs
+in interpret mode, which is a correctness path, not a fast path).
+
+``sibling_subtraction_histograms`` implements the LightGBM trick on top of
+any method: build histograms for *left* children only and derive each right
+child as ``parent − left``.  Invariant: every sample in parent ``j`` lands
+in exactly one of its children (unsplit nodes route everything left), so
+``hist[parent j] == hist[child 2j] + hist[child 2j+1]`` and the derived
+right-child histogram is exact up to fp32 summation order.  This halves
+histogram work and — under data-parallel training — halves the per-level
+all-reduce bytes, because only left-child histograms are reduced.
 """
 
 from __future__ import annotations
 
+import typing
+
 import jax
 import jax.numpy as jnp
 
-from repro.core.layout import PackedEnsemble
+if typing.TYPE_CHECKING:  # import cycle: core.layout -> gbdt -> trainer -> ops
+    from repro.core.layout import PackedEnsemble
+
 from repro.kernels.binning import binning
-from repro.kernels.histogram import histogram
+from repro.kernels.histogram import histogram, histogram_fused
 from repro.kernels.predict import packed_predict
+from repro.kernels.ref import histogram_ref
+
+HIST_METHODS = ("ref", "fused", "pallas")
 
 
 def _interp() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def build_histogram(bins, gh, pos, *, n_nodes: int, n_bins: int):
-    return histogram(bins, gh, pos, n_nodes=n_nodes, n_bins=n_bins, interpret=_interp())
+def default_hist_method() -> str:
+    """The "auto" rule: MXU kernel on TPU, fused matmul path elsewhere."""
+    return "pallas" if jax.default_backend() == "tpu" else "fused"
+
+
+def build_histogram(bins, gh, pos, *, n_nodes: int, n_bins: int, method: str | None = None):
+    """(n, d) bins × (n, CH) channels × (n,) node ids -> (n_nodes, d, n_bins, CH).
+
+    fp32 accumulation regardless of input dtype; samples with
+    ``pos >= n_nodes`` contribute nothing (all three methods drop them).
+    ``method=None`` auto-selects per platform (see module docstring).
+    """
+    method = method or default_hist_method()
+    gh = gh.astype(jnp.float32)
+    if method == "ref":
+        return histogram_ref(bins, gh, pos, n_nodes, n_bins)
+    if method == "fused":
+        return histogram_fused(bins, gh, pos, n_nodes=n_nodes, n_bins=n_bins)
+    if method == "pallas":
+        return histogram(
+            bins, gh, pos, n_nodes=n_nodes, n_bins=n_bins, interpret=_interp()
+        )
+    raise ValueError(f"unknown histogram method {method!r}; known: {HIST_METHODS}")
+
+
+def sibling_subtraction_histograms(
+    bins, gh, child_local, parent_hist, *, n_bins: int, method: str | None = None,
+    reduce_fn=None,
+):
+    """Child-level histograms from the cached parent level, building only left
+    children.
+
+    Args:
+      bins: (n, d) bin ids.
+      gh: (n, CH) per-sample channels.
+      child_local: (n,) node-local child ids in [0, 2*n_parents).
+      parent_hist: (n_parents, d, n_bins, CH) — the previous level's
+        histograms (already cross-shard reduced, if training data-parallel).
+      n_bins, method: forwarded to :func:`build_histogram`.
+      reduce_fn: cross-shard reduction applied to the left-child histograms
+        *before* subtraction (``parent_hist`` must already be reduced), so
+        data-parallel training all-reduces only half the level's bytes.
+
+    Returns:
+      (2*n_parents, d, n_bins, CH) with ``hist[2j] == left child of j`` built
+      directly and ``hist[2j+1] == parent_hist[j] - hist[2j]``.
+    """
+    n_parents = parent_hist.shape[0]
+    is_left = (child_local % 2) == 0
+    gh_left = jnp.where(is_left[:, None], gh.astype(jnp.float32), 0.0)
+    left = build_histogram(
+        bins, gh_left, child_local // 2, n_nodes=n_parents, n_bins=n_bins, method=method
+    )
+    if reduce_fn is not None:
+        left = reduce_fn(left)
+    right = parent_hist - left
+    return jnp.stack([left, right], axis=1).reshape(2 * n_parents, *left.shape[1:])
 
 
 def apply_binning(x, edges):

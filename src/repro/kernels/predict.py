@@ -11,6 +11,24 @@ analogue of the paper's "model fits in MCU RAM".  Per depth step the kernel
 
 Only the sample tile streams from HBM; traversal never touches HBM, which
 turns tree inference from a memory-bound pointer chase into VPU compute.
+
+Tree batching: the grid is 2-D — (sample tiles × tree blocks) — and each
+grid step traverses a block of trees (statically unrolled), so large
+ensembles no longer serialize behind one long per-tree ``fori_loop``: each
+(tile, block) step is an independent unit of work and the per-tree
+bookkeeping (word-row slicing, loop carry) amortizes over the block.  The
+tree-block axis is the innermost grid dimension, so each output tile is
+revisited consecutively and accumulated in place (same reduction pattern
+as the histogram kernel).  Per tree the class accumulation is a column
+scatter-add ``acc.at[:, cls].add(v)`` — one vector update into the class
+column — instead of the dense ``(TILE, C)`` one-hot multiply the
+fori_loop version used.  Trees are round-major (``cls = tree % C``), and
+the block size is ``TREE_BLOCK`` rounded up to a multiple of C, which
+makes ``cls = (block*size + k) % C == k % C`` a *static* column index —
+Mosaic cannot lower a dynamic-index scatter into the lane dimension, a
+static single-column update it can.  The words/leaf arrays are
+zero-padded up to a multiple of the block size; padded trees are masked
+out by the static tree count.
 """
 
 from __future__ import annotations
@@ -22,6 +40,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 TILE = 256
+TREE_BLOCK = 8
 
 
 def _kernel(
@@ -39,22 +58,31 @@ def _kernel(
     tidx_bits: int,
     n_ensembles: int,
     n_fu: int,
+    n_trees: int,
+    tree_block: int,
 ):
+    tb = pl.program_id(1)              # tree-block index (innermost)
+
     x = x_ref[...]                     # (TILE, d)
-    words = words_ref[...]             # (T, I) uint32
-    lref = lref_ref[...]               # (T, L) int32
+    words = words_ref[...]             # (TREE_BLOCK, I) uint32
+    lref = lref_ref[...]               # (TREE_BLOCK, L) int32
     leaf_values = leaf_ref[...]        # (V,)
     thr_table = thr_ref[...]           # (NT,)
     thr_offsets = off_ref[...]         # (F+1,)
     used_features = feat_ref[...]      # (F,)
     base = base_ref[...]               # (C,)
 
-    T, I = words.shape
+    I = words.shape[1]
     C = n_ensembles
     tmask = jnp.uint32((1 << tidx_bits) - 1)
 
-    def tree_body(t, acc):
-        row = jax.lax.dynamic_slice_in_dim(words, t, 1, axis=0)[0]  # (I,)
+    @pl.when(tb == 0)
+    def _init():
+        out_ref[...] = jnp.broadcast_to(base[None, :], (TILE, C))
+
+    acc = jnp.zeros((TILE, C), jnp.float32)
+    for k in range(tree_block):        # static unroll over the tree block
+        row = words[k]                 # (I,)
         idx = jnp.zeros((TILE,), jnp.int32)
         for _ in range(max_depth):
             word = row[idx]
@@ -67,17 +95,12 @@ def _kernel(
             thr = thr_table[thr_offsets[safe] + tix]
             go_left = jnp.where(split, xv <= thr, True)
             idx = 2 * idx + jnp.where(go_left, 1, 2)
-        leaf_row = jax.lax.dynamic_slice_in_dim(lref, t, 1, axis=0)[0]
-        v = leaf_values[leaf_row[idx - I]]                   # (TILE,)
-        cls = t % C
-        onehot = (jax.lax.broadcasted_iota(jnp.int32, (1, C), 1) == cls).astype(
-            jnp.float32
-        )
-        return acc + v[:, None] * onehot
+        v = leaf_values[lref[k, idx - I]]                    # (TILE,)
+        live = (tb * tree_block + k < n_trees).astype(jnp.float32)  # pad mask
+        # tree_block % C == 0, so the class column is static (see module doc)
+        acc = acc.at[:, k % C].add(v * live)
 
-    acc = jnp.zeros((TILE, C), jnp.float32) + base[None, :]
-    acc = jax.lax.fori_loop(0, T, tree_body, acc)
-    out_ref[...] = acc
+    out_ref[...] += acc
 
 
 @functools.partial(
@@ -102,12 +125,21 @@ def packed_predict(
     """(n, d) raw floats -> (n, C) ensemble scores from the packed model."""
     n, d = x.shape
     C = n_ensembles
-    if words.shape[0] == 0:  # zero-tree artifact: base scores only
+    T = words.shape[0]
+    if T == 0:  # zero-tree artifact: base scores only
         return jnp.broadcast_to(base_score[None, :].astype(jnp.float32), (n, C))
     n_pad = -n % TILE
     if n_pad:
         x = jnp.pad(x, ((0, n_pad), (0, 0)))
     n_tiles = (n + n_pad) // TILE
+    # block size: TREE_BLOCK rounded up to a multiple of C, so every class
+    # column index inside a block is static (cls = k % C)
+    tree_block = -(-TREE_BLOCK // C) * C
+    t_pad = -T % tree_block
+    if t_pad:  # padded trees are masked out in-kernel via the static T
+        words = jnp.pad(words, ((0, t_pad), (0, 0)))
+        leaf_ref = jnp.pad(leaf_ref, ((0, t_pad), (0, 0)))
+    n_tblocks = (T + t_pad) // tree_block
     n_fu = used_features.shape[0]
     if n_fu == 0:
         # fully-unsplit ensemble: pad the gather tables (true |F_U| still
@@ -115,7 +147,7 @@ def packed_predict(
         used_features = jnp.zeros((1,), jnp.int32)
         thr_table = jnp.zeros((1,), jnp.float32)
 
-    whole = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    whole = lambda shape: pl.BlockSpec(shape, lambda i, t: (0,) * len(shape))
     out = pl.pallas_call(
         functools.partial(
             _kernel,
@@ -123,19 +155,21 @@ def packed_predict(
             tidx_bits=tidx_bits,
             n_ensembles=n_ensembles,
             n_fu=n_fu,
+            n_trees=T,
+            tree_block=tree_block,
         ),
-        grid=(n_tiles,),
+        grid=(n_tiles, n_tblocks),
         in_specs=[
-            pl.BlockSpec((TILE, d), lambda i: (i, 0)),
-            whole(words.shape),
-            whole(leaf_ref.shape),
+            pl.BlockSpec((TILE, d), lambda i, t: (i, 0)),
+            pl.BlockSpec((tree_block, words.shape[1]), lambda i, t: (t, 0)),
+            pl.BlockSpec((tree_block, leaf_ref.shape[1]), lambda i, t: (t, 0)),
             whole(leaf_values.shape),
             whole(thr_table.shape),
             whole(thr_offsets.shape),
             whole(used_features.shape),
             whole(base_score.shape),
         ],
-        out_specs=pl.BlockSpec((TILE, C), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((TILE, C), lambda i, t: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n + n_pad, C), jnp.float32),
         interpret=interpret,
     )(

@@ -7,7 +7,11 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels.binning import binning
 from repro.kernels.histogram import histogram
-from repro.kernels.ops import predict_packed_model
+from repro.kernels.ops import (
+    build_histogram,
+    predict_packed_model,
+    sibling_subtraction_histograms,
+)
 from repro.kernels.ref import binning_ref, histogram_ref, packed_predict_ref
 
 
@@ -34,6 +38,83 @@ def test_histogram_dtypes(dtype):
     out = histogram(bins, gh, pos, n_nodes=1, n_bins=32)
     ref = histogram_ref(bins, gh.astype(jnp.float32), pos, 1, 32)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("method", ["ref", "fused", "pallas"])
+@pytest.mark.parametrize("dtype", ["f32", "bf16"])
+@pytest.mark.parametrize("n,d,n_bins,n_nodes", [
+    (64, 3, 16, 1),     # single node (level 0)
+    (513, 5, 64, 8),    # unaligned n, power-of-two nodes
+    (300, 2, 32, 9),    # nodes not a multiple of the pallas NODE_CHUNK
+])
+def test_histogram_dispatch_parity(method, dtype, n, d, n_bins, n_nodes):
+    """Every dispatch path matches the segment-sum oracle to <= 1e-5,
+    including bf16 channel inputs (fp32 accumulation, exact counts) and
+    empty nodes (pos never reaches the last node)."""
+    rng = np.random.default_rng(n + d + n_nodes)
+    bins = jnp.asarray(rng.integers(0, n_bins, (n, d)), jnp.int8)
+    gh = np.stack([rng.normal(size=n), rng.uniform(0.1, 1.0, n), np.ones(n)], axis=-1)
+    gh = jnp.asarray(gh, jnp.float32)
+    if dtype == "bf16":
+        gh = gh.astype(jnp.bfloat16)  # storage rounding; accumulation stays f32
+    # leave the last node empty
+    pos = jnp.asarray(rng.integers(0, max(n_nodes - 1, 1), (n,)), jnp.int32)
+    out = build_histogram(bins, gh, pos, n_nodes=n_nodes, n_bins=n_bins, method=method)
+    ref = histogram_ref(bins, gh.astype(jnp.float32), pos, n_nodes, n_bins)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+    # count channel is exact regardless of the g/h dtype
+    np.testing.assert_array_equal(np.asarray(out[..., 2]), np.asarray(ref[..., 2]))
+    assert float(jnp.sum(out[..., 2])) == n * d
+    if n_nodes > 1:
+        np.testing.assert_allclose(np.asarray(out[n_nodes - 1]), 0.0)  # empty node
+
+
+@pytest.mark.parametrize("method", ["ref", "fused", "pallas"])
+def test_histogram_dispatch_drops_out_of_range_pos(method):
+    """The shared sentinel: samples with pos >= n_nodes contribute nothing."""
+    rng = np.random.default_rng(0)
+    n, d, n_bins, n_nodes = 200, 3, 16, 4
+    bins = jnp.asarray(rng.integers(0, n_bins, (n, d)), jnp.int32)
+    gh = jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, n_nodes, (n,)), jnp.int32)
+    keep = jnp.asarray(rng.random(n) < 0.5)
+    pos_masked = jnp.where(keep, pos, n_nodes)
+    out = build_histogram(
+        bins, gh, pos_masked, n_nodes=n_nodes, n_bins=n_bins, method=method
+    )
+    ref = histogram_ref(
+        bins, jnp.where(keep[:, None], gh, 0.0), pos, n_nodes, n_bins
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("method", ["ref", "fused", "pallas"])
+@pytest.mark.parametrize("n_parents", [1, 4, 8])
+def test_sibling_subtraction_matches_direct(method, n_parents):
+    """parent - left == right for every (node, feature, bin) cell, including
+    parents whose samples all route one way (empty sibling)."""
+    rng = np.random.default_rng(n_parents)
+    n, d, n_bins = 600, 4, 32
+    bins = jnp.asarray(rng.integers(0, n_bins, (n, d)), jnp.int8)
+    gh = jnp.asarray(
+        np.stack([rng.normal(size=n), rng.uniform(0.1, 1.0, n), np.ones(n)], -1),
+        jnp.float32,
+    )
+    parent_np = rng.integers(0, n_parents, (n,))
+    went_left = rng.random(n) < 0.5
+    went_left[parent_np == 0] = True  # parent 0: empty right child
+    parent_of = jnp.asarray(parent_np, jnp.int32)
+    child = 2 * parent_of + jnp.asarray(np.where(went_left, 0, 1), jnp.int32)
+
+    parent_hist = build_histogram(
+        bins, gh, parent_of, n_nodes=n_parents, n_bins=n_bins, method=method
+    )
+    out = sibling_subtraction_histograms(
+        bins, gh, child, parent_hist, n_bins=n_bins, method=method
+    )
+    direct = histogram_ref(bins, gh, child, 2 * n_parents, n_bins)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(direct), rtol=1e-5, atol=1e-5)
 
 
 @given(
@@ -96,3 +177,40 @@ def test_packed_predict_vs_forest(task, n_classes, depth):
         n_ensembles=packed.n_ensembles,
     )
     np.testing.assert_allclose(np.asarray(out), np.asarray(oracle), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("task,n_classes,rounds", [
+    ("binary", 0, 2),       # T < TREE_BLOCK: single partially-filled block
+    ("binary", 0, 8),       # T == TREE_BLOCK exactly
+    ("regression", 0, 11),  # T % TREE_BLOCK != 0: padded final block
+    ("multiclass", 3, 6),   # T = 18 round-major trees over 3 classes
+])
+def test_packed_predict_tree_block_boundaries(task, n_classes, rounds):
+    """The tree-blocked 2-D grid matches the jnp oracle for ensemble sizes
+    below / at / across TREE_BLOCK boundaries (padded trees contribute 0)."""
+    from repro.core import decode, encode, to_packed
+    from repro.gbdt import GBDTConfig, apply_bins, fit_bins, train_jit
+
+    rng = np.random.default_rng(rounds)
+    X = rng.normal(size=(250, 5)).astype(np.float32)
+    if task == "regression":
+        y = X[:, 0] * 2 + np.sin(X[:, 1])
+    elif task == "binary":
+        y = (X[:, 0] > 0.0).astype(np.float32)
+    else:
+        y = np.digitize(X[:, 0], [-0.5, 0.5]).astype(np.float32)
+    edges = jnp.asarray(fit_bins(X, 16))
+    bins = apply_bins(jnp.asarray(X), edges)
+    cfg = GBDTConfig(task=task, n_classes=n_classes, n_rounds=rounds, max_depth=3)
+    forest, _, _ = train_jit(cfg, bins, jnp.asarray(y.astype(np.float32)), edges)
+    packed = to_packed(decode(encode(forest)))
+    out = predict_packed_model(packed, X)
+    oracle = packed_predict_ref(
+        jnp.asarray(X), jnp.asarray(packed.words), jnp.asarray(packed.leaf_ref),
+        jnp.asarray(packed.leaf_values), jnp.asarray(packed.thr_table),
+        jnp.asarray(packed.thr_offsets), jnp.asarray(packed.used_features),
+        jnp.asarray(packed.base_score),
+        max_depth=packed.max_depth, tidx_bits=packed.tidx_bits,
+        n_ensembles=packed.n_ensembles,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle), rtol=1e-5, atol=1e-5)

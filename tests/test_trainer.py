@@ -139,6 +139,47 @@ def test_multiclass_one_ensemble_per_class():
     assert acc > 0.85
 
 
+def test_hist_paths_agree(data):
+    """The fused + sibling-subtraction default grows the same trees as the
+    segment-sum reference path (the old trainer hot loop)."""
+    bins, y, edges = data
+    base = GBDTConfig(task="binary", n_rounds=12, max_depth=4,
+                      toad_penalty_feature=0.5, toad_penalty_threshold=0.1)
+    ref_cfg = dataclasses.replace(base, hist_method="ref", hist_subtract=False)
+    f_ref, h_ref, _ = train_jit(ref_cfg, bins, y, edges)
+    for method in ("fused", "ref"):
+        cfg = dataclasses.replace(base, hist_method=method, hist_subtract=True)
+        f, h, _ = train_jit(cfg, bins, y, edges)
+        assert bool(jnp.all(f.feature == f_ref.feature)), method
+        assert bool(jnp.all(f.thr_bin == f_ref.thr_bin)), method
+        assert bool(jnp.all(f.is_split == f_ref.is_split)), method
+        np.testing.assert_allclose(
+            np.asarray(f.leaf_values), np.asarray(f_ref.leaf_values),
+            rtol=1e-4, atol=1e-5, err_msg=method,
+        )
+
+
+def test_bf16_hist_counts_stay_exact(data):
+    """hist_dtype="bf16" rounds g/h only: node counts must stay exact f32 so
+    min_child_samples gating is untouched (counts > 256 would otherwise
+    round to multiples of 2 in bf16 and corrupt the gate)."""
+    bins, y, edges = data
+    n = bins.shape[0]
+    cfg = GBDTConfig(task="binary", n_rounds=12, max_depth=3,
+                     min_child_samples=300, hist_dtype="bf16")
+    forest, hist, aux = train_jit(cfg, bins, y, edges)
+    K = int(forest.n_trees)
+    assert K >= 1
+    cnts = np.asarray(aux["leaf_cnt"])[:K]
+    # every sample lands in exactly one leaf per tree — exact, no rounding
+    np.testing.assert_allclose(cnts.sum(axis=1), float(n))
+    # the gate itself: every split leaves both children >= min_child_samples
+    splits = np.asarray(forest.is_split)[:K]
+    assert cnts[cnts > 0].min() >= cfg.min_child_samples or not splits.any()
+    acc = float(jnp.mean((predict_binned(forest, bins)[:, 0] > 0) == y))
+    assert acc > 0.85
+
+
 def test_leaf_value_sharing_quantized(data):
     bins, y, edges = data
     cfg = GBDTConfig(task="binary", n_rounds=20, max_depth=3, leaf_quant=0.02)
