@@ -11,7 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import best_under_limit, cumulative_metrics, per_round_bytes, save_json
-from repro.api import ToadModel
+from repro.api import CompressionSpec, ToadModel
+from repro.core import stream_sections
 from repro.data.pipeline import split_dataset
 from repro.data.synth import load
 from repro.gbdt import GBDTConfig, apply_bins, make_loss
@@ -22,9 +23,34 @@ PENALTIES = [(1.0, 0.25), (4.0, 1.0), (16.0, 4.0), (64.0, 16.0)]
 DEPTHS = [2, 3]
 
 
+def stage_breakdown(dataset: str, model: ToadModel) -> list[dict]:
+    """Per-stage compressed-size report for one representative model.
+
+    Runs the staged CompressionPipeline under three specs (exact, fp16
+    leaves, 4-bit codebook) and records each stage's (bytes_before,
+    bytes_after, max|Δpred|) plus the five-component stream breakdown —
+    the PACSET-style "which bytes live where" view of Fig. 4.
+    """
+    out = []
+    for spec in (CompressionSpec.exact(), CompressionSpec.fp16_leaves(),
+                 CompressionSpec.codebook(4)):
+        model.compress(spec=spec)
+        rep = model.compression_report
+        out.append({
+            "dataset": dataset,
+            "spec": spec.name,
+            "n_bytes": rep.n_bytes,
+            "max_abs_pred_delta": rep.max_abs_pred_delta,
+            "stages": [s.as_dict() for s in rep.stages],
+            "sections": stream_sections(model.forest),
+        })
+    return out
+
+
 def run(datasets=("covtype_binary", "california_housing", "wine_quality", "kr_vs_kp"),
         n_rounds=192, seeds=(1, 2, 3), n_cap=12000, verbose=True):
     rows = []
+    breakdown_rows = []
     for name in datasets:
         for seed in seeds:
             ds = load(name, seed=seed, n=min(n_cap, 40000) if "covtype" in name else None)
@@ -66,6 +92,11 @@ def run(datasets=("covtype_binary", "california_housing", "wine_quality", "kr_vs
                     add_curve("toad_penalized", np.asarray(h1["bytes"]),
                               cumulative_metrics(f1, bte, yte, loss),
                               np.asarray(h1["accepted"]))
+                    # per-stage size breakdown once per dataset (first seed,
+                    # deepest trees, mid-strength penalties)
+                    if (seed == seeds[0] and depth == DEPTHS[-1]
+                            and (pf, pt) == PENALTIES[1]):
+                        breakdown_rows.extend(stage_breakdown(name, m1))
 
                 # CEGB
                 for tr in (1.0, 8.0):
@@ -102,6 +133,7 @@ def run(datasets=("covtype_binary", "california_housing", "wine_quality", "kr_vs
                 if verbose:
                     print(row, flush=True)
     save_json("fig4_quality_memory.json", rows)
+    save_json("fig4_stage_breakdown.json", breakdown_rows)
     return rows
 
 

@@ -6,6 +6,7 @@ pattern that scales to the 16x16 pod (see launch/dryrun.py toad_gbdt cell).
     PYTHONPATH=src python examples/distributed_grid.py
 """
 
+import dataclasses
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
@@ -40,8 +41,10 @@ def main():
     same = bool(jnp.all(f_dp.feature == f_sd.feature))
     print(f"data-parallel == single-device trees: {same}")
 
-    # 2) quantized histogram collectives (4x fewer ICI bytes)
-    f_q, _, _ = train_data_parallel(cfg, bins_tr, y_tr, edges, mesh, hist_quant_bits=8)
+    # 2) quantized histogram collectives (4x fewer ICI bytes) — the knob
+    # lives on the config like every other trainer setting
+    cfg_q = dataclasses.replace(cfg, hist_quant_bits=8)
+    f_q, _, _ = train_data_parallel(cfg_q, bins_tr, y_tr, edges, mesh)
     acc = float(loss.metric(jnp.asarray(sp.y_test), predict_binned(f_dp, bins_te)))
     acc_q = float(loss.metric(jnp.asarray(sp.y_test), predict_binned(f_q, bins_te)))
     print(f"test acc exact-collectives={acc:.4f} int8-collectives={acc_q:.4f}")

@@ -63,10 +63,21 @@ def main():
 
     print(f"\nencoded artifact: {smallest.encoded.n_bytes:.0f} bytes "
           f"— fits an Arduino EEPROM")
-    path = smallest.save("/tmp/toad_quickstart.npz")
+    path = smallest.save("/tmp/toad_quickstart.toad")
     restored = ToadModel.load(path)
     assert np.allclose(restored.predict(sp.x_test, backend="reference"), ref, atol=1e-6)
     print(f"saved + restored from {path}: predictions identical")
+
+    # budget-targeted compression: ask for a device budget instead of a
+    # spec; the ladder (exact -> fp16 leaves -> k-bit codebook) finds the
+    # first plan that fits and the report explains what was traded
+    deployed = models["vanilla GBDT          "]
+    budget = deployed.encoded.n_bytes * 0.5
+    deployed.compress(budget_bytes=budget)
+    rep = deployed.compression_report
+    print(f"\nbudget {budget:.0f} B -> spec {rep.spec.name!r}: "
+          f"{rep.n_bytes:.0f} B, max|Δpred| {rep.max_abs_pred_delta:.1e} "
+          f"(R2 now {deployed.score(sp.x_test, sp.y_test):.3f})")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,13 @@ def main():
     ap.add_argument("--backend", default=None,
                     help="deploy-check backend (default: auto)")
     ap.add_argument("--export", default="/tmp/toad_model.bin")
+    ap.add_argument("--compress-budget", type=float, default=None,
+                    help="post-training byte budget: walk the compression "
+                         "ladder (exact -> fp16 leaves -> k-bit codebook) "
+                         "and keep the first plan that fits")
+    ap.add_argument("--export-artifact", default=None,
+                    help="also write a versioned .toad deployment artifact "
+                         "(servable via launch/serve.py --model)")
     args = ap.parse_args()
 
     ds = load(args.dataset, seed=1, n=args.n)
@@ -41,7 +48,12 @@ def main():
     )
     print(f"training {args.dataset} (n={ds.n}) under a "
           f"{args.budget_bytes:.0f}-byte budget ...")
-    model.fit(sp.x_train, sp.y_train).compress()
+    model.fit(sp.x_train, sp.y_train)
+    if args.compress_budget is not None:
+        model.compress(budget_bytes=args.compress_budget)
+        print(model.compression_report.summary())
+    else:
+        model.compress()
 
     metric = model.score(sp.x_test, sp.y_test)
     rep = model.memory_report()
@@ -57,6 +69,11 @@ def main():
     with open(args.export, "wb") as f:
         f.write(model.encoded.data.tobytes())
     print(f"exported {model.encoded.n_bytes:.0f} bytes -> {args.export}")
+    if args.export_artifact:
+        model.save(args.export_artifact)
+        print(f"exported .toad artifact -> {args.export_artifact} "
+              f"(serve: python -m repro.launch.serve --arch toad-gbdt "
+              f"--model {args.export_artifact})")
 
     # verify the deployable artifact end to end: every available backend
     # must reproduce the reference scores on raw features

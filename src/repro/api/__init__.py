@@ -1,6 +1,13 @@
 """Unified estimator API: ``ToadModel`` + pluggable predictor backends +
-the micro-batching GBDT serving engine.  See README.md in this package."""
+the staged compression pipeline + the versioned .toad artifact + the
+micro-batching GBDT serving engine.  See README.md in this package."""
 
+from repro.api.artifact import (
+    TOAD_FORMAT_VERSION,
+    ArtifactError,
+    load_artifact,
+    save_artifact,
+)
 from repro.api.backends import (
     PredictorBackend,
     available_backends,
@@ -11,8 +18,30 @@ from repro.api.backends import (
 )
 from repro.api.engine import EngineStats, GBDTEngine, MicroBatchEngine
 from repro.api.model import NotFittedError, ToadModel
+from repro.core.pipeline import (
+    CompressionReport,
+    CompressionSpec,
+    CompressionStage,
+    default_ladder,
+    list_stages,
+    register_stage,
+    run_pipeline,
+    search_budget,
+)
 
 __all__ = [
+    "TOAD_FORMAT_VERSION",
+    "ArtifactError",
+    "load_artifact",
+    "save_artifact",
+    "CompressionReport",
+    "CompressionSpec",
+    "CompressionStage",
+    "default_ladder",
+    "list_stages",
+    "register_stage",
+    "run_pipeline",
+    "search_budget",
     "PredictorBackend",
     "available_backends",
     "get_backend",

@@ -1,0 +1,194 @@
+"""The versioned ``.toad`` deployment artifact.
+
+A ``.toad`` file is the unit of deployment for a compressed model: one
+self-contained bundle (npz container, any extension — the path is written
+verbatim) holding
+
+* **format version** — ``TOAD_FORMAT_VERSION``; a loader rejects artifacts
+  newer than it understands instead of mis-parsing them,
+* **compression spec** — the declarative :class:`CompressionSpec` that
+  produced the stream, so a deployment can be reproduced or audited,
+* **encoded stream** — the bit-packed ToaD serialization (when compressed),
+* **forest arrays** — the dense trained/transformed forest, so the
+  reference backend and re-compression work without the original data,
+* **manifest** — sizes (total + the five stream components), tree/feature
+  counts, and the compression report of the producing pipeline run,
+* **eval fingerprint** — a sha256 over the encoded stream bytes (exact:
+  catches any stream corruption before it is ever decoded) plus the
+  model's predictions on a deterministic probe set, compared with a small
+  absolute tolerance (robust to BLAS/platform jitter); both are verified
+  at load time so a corrupted or mismatched artifact fails loudly instead
+  of serving wrong scores.
+
+``ToadModel.save``/``load`` delegate here; ``GBDTEngine`` and
+``launch/serve.py --model path.toad`` consume artifacts directly, so a
+serving host never retrains.  Pre-versioning bundles (PR-2 era ``.npz``
+without ``format_version``) load as legacy version 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+import numpy as np
+
+from repro.core.layout import EncodedModel, decode, to_packed
+from repro.core.memory import compression_summary, stream_sections
+from repro.core.pipeline import CompressionSpec, _predict, probe_inputs
+
+TOAD_FORMAT_VERSION = 2
+
+_FINGERPRINT_N = 32
+_FINGERPRINT_SEED = 7
+_FINGERPRINT_PRED_ATOL = 2e-4
+
+
+class ArtifactError(RuntimeError):
+    """Raised when a .toad artifact cannot be loaded safely."""
+
+
+def probe_predictions(
+    forest, n: int = _FINGERPRINT_N, seed: int = _FINGERPRINT_SEED
+) -> np.ndarray:
+    """The model's (n, C) predictions on the deterministic probe set."""
+    return _predict(forest, probe_inputs(forest, n=n, seed=seed)).astype(np.float32)
+
+
+def stream_digest(encoded) -> str:
+    """Exact sha256 over the encoded stream bytes + bit length."""
+    h = hashlib.sha256(np.asarray(encoded.data, np.uint8).tobytes())
+    h.update(int(encoded.n_bits).to_bytes(8, "little"))
+    return h.hexdigest()
+
+
+def build_manifest(model) -> dict:
+    """Size + shape summary of a fitted (optionally compressed) model."""
+    forest = model.forest
+    summary = compression_summary(forest)
+    manifest = {
+        "n_trees": int(forest.n_trees),
+        "max_depth": forest.max_depth,
+        "n_features": forest.n_features,
+        "n_ensembles": forest.n_ensembles,
+        "n_leaf_values": int(forest.n_leaf_values),
+        "toad_bytes": summary["toad_bytes"],
+        "sections": stream_sections(forest),
+    }
+    if model.encoded is not None:
+        manifest["encoded_stream_bytes"] = model.encoded.n_bytes
+        manifest["encoded_stream_bits"] = model.encoded.n_bits
+    return manifest
+
+
+def save_artifact(model, path: str) -> str:
+    """Persist a fitted model as a versioned .toad bundle at ``path``.
+
+    The path is written verbatim (no extension appended), so ``model.toad``
+    stays ``model.toad``.
+    """
+    from repro.api.model import _FOREST_FIELDS
+
+    model._require_fitted()
+    arrays = {f: np.asarray(getattr(model.forest, f)) for f in _FOREST_FIELDS}
+    fingerprint = {
+        "n_probe": _FINGERPRINT_N,
+        "seed": _FINGERPRINT_SEED,
+        "pred_atol": _FINGERPRINT_PRED_ATOL,
+    }
+    if model.encoded is not None:
+        fingerprint["stream_sha256"] = stream_digest(model.encoded)
+    arrays["fingerprint_preds"] = probe_predictions(model.forest)
+    meta = {
+        "format_version": TOAD_FORMAT_VERSION,
+        "config": dataclasses.asdict(model.config),
+        "n_bins": model.n_bins,
+        "n_ensembles": model.forest.n_ensembles,
+        "compressed": model.is_compressed,
+        "spec": model.spec.to_dict() if model.spec is not None else None,
+        "manifest": build_manifest(model),
+        "fingerprint": fingerprint,
+        "report": (
+            model.compression_report.as_dict()
+            if model.compression_report is not None
+            else None
+        ),
+    }
+    arrays["meta_json"] = np.frombuffer(
+        json.dumps(meta).encode("utf-8"), dtype=np.uint8
+    )
+    if model.encoded is not None:
+        arrays["toad_stream"] = model.encoded.data
+        arrays["toad_stream_bits"] = np.asarray(model.encoded.n_bits, np.int64)
+    with open(path, "wb") as f:
+        np.savez_compressed(f, **arrays)
+    return path
+
+
+def load_artifact(path: str, verify: bool = True):
+    """Load a .toad bundle back into a :class:`ToadModel`.
+
+    Rejects artifacts with a newer format version than this runtime
+    understands; bundles without a version (pre-spec saves) load as legacy
+    version 1.  With ``verify=True`` (default) the encoded stream's sha256
+    is checked *before* the stream is decoded, and the stored probe-set
+    predictions are recomputed from the loaded forest arrays and compared
+    within the recorded tolerance — so both a corrupted stream and
+    corrupted arrays fail loudly instead of serving wrong scores.
+    """
+    import jax.numpy as jnp
+
+    from repro.api.model import _FOREST_FIELDS, ToadModel
+    from repro.gbdt import GBDTConfig
+    from repro.gbdt.forest import Forest
+
+    with np.load(path) as z:
+        if "meta_json" not in z:
+            raise ArtifactError(f"{path}: not a .toad artifact (no meta_json)")
+        meta = json.loads(bytes(z["meta_json"].tobytes()).decode("utf-8"))
+        version = int(meta.get("format_version", 1))
+        if version < 1 or version > TOAD_FORMAT_VERSION:
+            raise ArtifactError(
+                f"{path}: .toad format version {version} is not supported by "
+                f"this runtime (max {TOAD_FORMAT_VERSION}); upgrade the runtime "
+                f"or re-export the artifact"
+            )
+        model = ToadModel(config=GBDTConfig(**meta["config"]), n_bins=meta["n_bins"])
+        model.forest = Forest(
+            **{f: jnp.asarray(z[f]) for f in _FOREST_FIELDS},
+            n_ensembles=int(meta["n_ensembles"]),
+        )
+        fp = meta.get("fingerprint") if version >= 2 else None
+        if meta.get("compressed") and "toad_stream" in z:
+            model.encoded = EncodedModel(
+                data=np.array(z["toad_stream"], dtype=np.uint8),
+                n_bits=int(z["toad_stream_bits"]),
+            )
+            if verify and fp and fp.get("stream_sha256"):
+                # check the stream *before* decoding: a flipped bit must not
+                # reach the packed/pallas serving path
+                if stream_digest(model.encoded) != fp["stream_sha256"]:
+                    raise ArtifactError(
+                        f"{path}: encoded-stream digest mismatch — the ToaD "
+                        f"bit stream is corrupted"
+                    )
+            model.decoded = decode(model.encoded)
+            model.packed = to_packed(model.decoded)
+        if version >= 2:
+            if meta.get("spec"):
+                model.spec = CompressionSpec.from_dict(meta["spec"])
+            model.artifact_meta = meta
+            if verify and fp and "fingerprint_preds" in z:
+                current = probe_predictions(
+                    model.forest, n=fp["n_probe"], seed=fp["seed"]
+                )
+                atol = float(fp.get("pred_atol", _FINGERPRINT_PRED_ATOL))
+                if not np.allclose(current, z["fingerprint_preds"],
+                                   rtol=0.0, atol=atol):
+                    raise ArtifactError(
+                        f"{path}: eval fingerprint mismatch — the stored arrays "
+                        f"do not reproduce the recorded predictions within "
+                        f"atol={atol} (corrupted or hand-edited artifact)"
+                    )
+    return model

@@ -59,8 +59,12 @@ def get_backend(name: str) -> PredictorBackend:
     try:
         return _REGISTRY[name]
     except KeyError:
+        # self-diagnosing: a typo'd name shows what could have been meant,
+        # in deterministic (sorted) order, and what actually runs here
         raise KeyError(
-            f"unknown backend {name!r}; registered: {sorted(_REGISTRY)}"
+            f"unknown backend {name!r}; registered: "
+            f"{', '.join(list_backends())}; available on this platform: "
+            f"{', '.join(available_backends())}"
         ) from None
 
 

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
+import os
 import queue
 import threading
 import time
@@ -175,7 +176,12 @@ class MicroBatchEngine:
 
 
 class GBDTEngine(MicroBatchEngine):
-    """A MicroBatchEngine serving a ToadModel through a named backend."""
+    """A MicroBatchEngine serving a ToadModel through a named backend.
+
+    ``model`` may also be a path to a prebuilt ``.toad`` artifact — the
+    deployment flow: compile/compress once, ship the artifact, serve it
+    without retraining.
+    """
 
     def __init__(
         self,
@@ -185,6 +191,10 @@ class GBDTEngine(MicroBatchEngine):
         max_batch: int = 256,
         max_wait_ms: float = 2.0,
     ):
+        if isinstance(model, (str, os.PathLike)):
+            from repro.api.artifact import load_artifact
+
+            model = load_artifact(model)
         fn = model.predictor(backend)
         d = int(model.forest.n_features)
         super().__init__(fn, d, max_batch=max_batch, max_wait_ms=max_wait_ms)

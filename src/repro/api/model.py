@@ -19,7 +19,6 @@ apply the task's link function on top.
 from __future__ import annotations
 
 import dataclasses
-import json
 
 import jax.numpy as jnp
 import numpy as np
@@ -27,12 +26,15 @@ import numpy as np
 from repro.api.backends import PredictorBackend, resolve_backend
 from repro.core import (
     compression_summary,
-    decode,
-    encode,
     reuse_factor,
-    to_packed,
 )
 from repro.core.layout import EncodedModel
+from repro.core.pipeline import (
+    CompressionReport,
+    CompressionSpec,
+    run_pipeline,
+    search_budget,
+)
 from repro.gbdt import GBDTConfig, apply_bins, fit_bins, make_loss
 from repro.gbdt.forest import Forest
 
@@ -76,6 +78,10 @@ class ToadModel:
         self.encoded: EncodedModel | None = None
         self.decoded = None
         self.packed = None
+        self.spec: CompressionSpec | None = None
+        self.compression_report: CompressionReport | None = None
+        self.artifact_meta: dict | None = None
+        self._forest_exact: Forest | None = None
         self._loss = make_loss(config.task, config.n_classes)
         self._predict_fns: dict[str, object] = {}
 
@@ -116,9 +122,7 @@ class ToadModel:
         self.forest, self.history, self.aux = train_jit(
             self.config, bins, jnp.asarray(y), edges
         )
-        # fitted state changed: drop compiled predictors and artifacts
-        self.encoded = self.decoded = self.packed = None
-        self._predict_fns.clear()
+        self._reset_artifacts()  # fitted state changed
         return self
 
     def fit_binned(self, bins, y, edges) -> "ToadModel":
@@ -134,23 +138,65 @@ class ToadModel:
             self.config, jnp.asarray(bins), jnp.asarray(np.asarray(y, np.float32)),
             jnp.asarray(edges)
         )
-        self.encoded = self.decoded = self.packed = None
-        self._predict_fns.clear()
+        self._reset_artifacts()
         return self
 
-    def compress(self) -> "ToadModel":
-        """Serialize to the ToaD stream and build the deployment artifacts.
+    def _reset_artifacts(self):
+        """Drop compiled predictors and compression artifacts (state changed)."""
+        self.encoded = self.decoded = self.packed = None
+        self.spec = self.compression_report = self.artifact_meta = None
+        self._forest_exact = None
+        self._predict_fns.clear()
 
-        encode -> bit stream, decode -> dense value arrays, to_packed ->
-        uint32 node words + global tables (what the packed/pallas backends
-        execute).  Returns self for chaining.
+    def compress(
+        self,
+        spec: CompressionSpec | dict | str | None = None,
+        budget_bytes: float | None = None,
+        probe=None,
+    ) -> "ToadModel":
+        """Run the staged compression pipeline and keep its artifacts.
+
+        With no arguments this is the historical lossless chain (encode ->
+        bit stream, decode -> dense arrays, to_packed -> uint32 node words),
+        byte-identical to prior releases.  ``spec`` selects/orders stages
+        declaratively (a :class:`CompressionSpec`, its dict, or its JSON);
+        ``budget_bytes`` instead walks the exact -> fp16-leaf -> k-bit
+        codebook ladder and keeps the first plan whose encoded stream fits.
+        The resulting :class:`CompressionReport` lands on
+        ``self.compression_report``; a lossy plan replaces ``self.forest``
+        with the transformed forest so *every* backend (reference included)
+        executes the deployed model.  Recompression always restarts from the
+        exact forest.  Returns self for chaining.
         """
         self._require_fitted()
-        self.encoded = encode(self.forest)
-        self.decoded = decode(self.encoded)
-        self.packed = to_packed(self.decoded)
+        if spec is not None and budget_bytes is not None:
+            raise ValueError("pass either spec= or budget_bytes=, not both")
+        if isinstance(spec, str):
+            spec = CompressionSpec.from_json(spec)
+        elif isinstance(spec, dict):
+            spec = CompressionSpec.from_dict(spec)
+        base = self.forest if self._forest_exact is None else self._forest_exact
+        if budget_bytes is not None:
+            res = search_budget(base, budget_bytes, probe=probe)
+        else:
+            res = run_pipeline(base, spec, probe=probe)
+        if res.packed is None:
+            raise ValueError(
+                "spec must include the 'encode' and 'pack' stages to produce "
+                f"a deployable artifact (got stages={res.report.spec.stages})"
+            )
+        self._forest_exact = base
+        self.forest = res.forest
+        self.encoded, self.decoded, self.packed = res.encoded, res.decoded, res.packed
+        self.spec = res.report.spec
+        self.compression_report = res.report
         self._predict_fns.clear()
         return self
+
+    @property
+    def forest_exact(self) -> Forest | None:
+        """The untransformed trained forest (before any lossy stage)."""
+        return self._forest_exact if self._forest_exact is not None else self.forest
 
     # ------------------------------------------------------------ prediction
     def predictor(self, backend: str | PredictorBackend | None = None):
@@ -207,60 +253,60 @@ class ToadModel:
 
     # -------------------------------------------------------------- analysis
     def memory_report(self) -> dict:
-        """All layout sizes + reuse factor + exact encoded stream length."""
+        """All layout sizes + reuse factor + the encoded stream length.
+
+        Works before ``compress()``: the stream length then falls back to
+        the ``toad_bits_host`` estimate (the encoder run on the fly) and is
+        labeled ``encoded_stream_basis="estimated"`` instead of
+        ``"encoded"``; the two agree exactly for lossless specs.
+        """
         self._require_fitted()
         report = compression_summary(self.forest)
         report["reuse_factor"] = reuse_factor(self.forest)
         if self.encoded is not None:
             report["encoded_stream_bytes"] = self.encoded.n_bytes
             report["encoded_stream_bits"] = self.encoded.n_bits
+            report["encoded_stream_basis"] = "encoded"
+        else:
+            # compression_summary already ran the encoder for toad_bytes
+            report["encoded_stream_bytes"] = report["toad_bytes"]
+            report["encoded_stream_bits"] = int(round(report["toad_bytes"] * 8))
+            report["encoded_stream_basis"] = "estimated"
+        if self.compression_report is not None:
+            report["compression_spec"] = self.compression_report.spec.name
+            report["max_abs_pred_delta"] = self.compression_report.max_abs_pred_delta
         if self.aux is not None and "toad_bytes" in self.aux:
             report["trainer_accounted_bytes"] = float(np.asarray(self.aux["toad_bytes"]))
         return report
 
     # ------------------------------------------------------------ persistence
     def save(self, path: str) -> str:
-        """Persist config + forest (+ ToaD stream when compressed) to .npz."""
-        self._require_fitted()
-        arrays = {f: np.asarray(getattr(self.forest, f)) for f in _FOREST_FIELDS}
-        meta = {
-            "config": dataclasses.asdict(self.config),
-            "n_bins": self.n_bins,
-            "n_ensembles": self.forest.n_ensembles,
-            "compressed": self.is_compressed,
-        }
-        arrays["meta_json"] = np.frombuffer(
-            json.dumps(meta).encode("utf-8"), dtype=np.uint8
-        )
-        if self.encoded is not None:
-            arrays["toad_stream"] = self.encoded.data
-            arrays["toad_stream_bits"] = np.asarray(self.encoded.n_bits, np.int64)
-        np.savez_compressed(path, **arrays)
-        return path
+        """Persist as a versioned .toad artifact (see ``repro.api.artifact``).
+
+        The bundle carries the format version, compression spec, encoded
+        stream, manifest and eval fingerprint; the path is written verbatim
+        (``model.toad`` stays ``model.toad``).
+        """
+        from repro.api.artifact import save_artifact
+
+        return save_artifact(self, path)
 
     @classmethod
-    def load(cls, path: str) -> "ToadModel":
-        with np.load(path) as z:
-            meta = json.loads(bytes(z["meta_json"].tobytes()).decode("utf-8"))
-            model = cls(config=GBDTConfig(**meta["config"]), n_bins=meta["n_bins"])
-            model.forest = Forest(
-                **{f: jnp.asarray(z[f]) for f in _FOREST_FIELDS},
-                n_ensembles=int(meta["n_ensembles"]),
-            )
-            if meta.get("compressed") and "toad_stream" in z:
-                model.encoded = EncodedModel(
-                    data=np.array(z["toad_stream"], dtype=np.uint8),
-                    n_bits=int(z["toad_stream_bits"]),
-                )
-                model.decoded = decode(model.encoded)
-                model.packed = to_packed(model.decoded)
-        return model
+    def load(cls, path: str, verify: bool = True) -> "ToadModel":
+        """Load a .toad artifact (or a legacy pre-versioning .npz bundle)."""
+        from repro.api.artifact import load_artifact
+
+        return load_artifact(path, verify=verify)
 
     def __repr__(self) -> str:
         state = (
             "unfitted"
             if not self.is_fitted
             else f"trees={int(self.forest.n_trees)}"
-            + (", compressed" if self.is_compressed else "")
+            + (
+                f", compressed[{self.spec.name if self.spec else '?'}]"
+                if self.is_compressed
+                else ""
+            )
         )
         return f"ToadModel(task={self.config.task!r}, {state})"

@@ -3,6 +3,10 @@
 - ``bitio``: bit-level stream I/O.
 - ``layout``: the five-component bit-packed memory layout (encode/decode).
 - ``memory``: exact stream-size accounting (host + in-jit) and baselines.
+- ``pipeline``: the staged CompressionPipeline (specs, stages, reports,
+  budget-targeted search).
+- ``codebook``: shared-value-table (k-means) quantization, used by the
+  ``leaf_codebook`` pipeline stage and for LM serving-weight experiments.
 """
 
 from repro.core.bitio import BitReader, BitWriter, bits_for
@@ -21,8 +25,21 @@ from repro.core.memory import (
     pointer_bits,
     quantized_pointer_bits,
     reuse_factor,
+    stream_sections,
     toad_bits,
     toad_bits_host,
+)
+from repro.core.pipeline import (
+    CompressionReport,
+    CompressionSpec,
+    CompressionStage,
+    default_ladder,
+    get_stage,
+    list_stages,
+    probe_inputs,
+    register_stage,
+    run_pipeline,
+    search_budget,
 )
 
 __all__ = [
@@ -41,6 +58,17 @@ __all__ = [
     "pointer_bits",
     "quantized_pointer_bits",
     "reuse_factor",
+    "stream_sections",
     "toad_bits",
     "toad_bits_host",
+    "CompressionReport",
+    "CompressionSpec",
+    "CompressionStage",
+    "default_ladder",
+    "get_stage",
+    "list_stages",
+    "probe_inputs",
+    "register_stage",
+    "run_pipeline",
+    "search_budget",
 ]

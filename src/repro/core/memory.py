@@ -104,6 +104,51 @@ def toad_bits_host(forest: Forest) -> int:
     return L.encode(forest).n_bits
 
 
+def stream_sections(forest: Forest) -> dict:
+    """Per-component byte breakdown of the ToaD stream (host-side).
+
+    The five components of paper Sec. 3.2: metadata, feature & threshold
+    map, global thresholds, global leaf values, trees.  ``total_bytes``
+    equals ``toad_bits_host(forest) / 8`` exactly (tested); the breakdown
+    powers artifact manifests and the fig4 per-stage size report.
+    """
+    K = int(forest.n_trees)
+    D = forest.max_depth
+    C = forest.n_ensembles
+    d = forest.n_features
+    I = 2**D - 1
+    Lf = 2**D
+    features, thr_by_feat = L._used_sets(forest)
+    n_fu = len(features)
+    max_t = max((len(v) for v in thr_by_feat.values()), default=1)
+    n_leaf = max(int(forest.n_leaf_values), 1)
+    edges = np.asarray(forest.edges)
+
+    fu_bits = bits_for(n_fu + 1)
+    tidx_bits = bits_for(max_t)
+    cnt_bits = bits_for(max_t)
+    leaf_bits = bits_for(n_leaf)
+    fidx_bits = bits_for(d)
+
+    meta = L.metadata_bits(C)
+    fmap = n_fu * (fidx_bits + 3 + 1 + cnt_bits)
+    thr = sum(
+        L.select_width(edges[f, thr_by_feat[f]])[0] * len(thr_by_feat[f])
+        for f in features
+    )
+    leaf_table = 32 * n_leaf
+    n_splits = int(np.asarray(forest.is_split)[:K].sum())
+    trees = K * (I * fu_bits + Lf * leaf_bits) + n_splits * tidx_bits
+    return {
+        "metadata_bytes": meta / 8.0,
+        "feature_map_bytes": fmap / 8.0,
+        "thresholds_bytes": thr / 8.0,
+        "leaf_table_bytes": leaf_table / 8.0,
+        "trees_bytes": trees / 8.0,
+        "total_bytes": (meta + fmap + thr + leaf_table + trees) / 8.0,
+    }
+
+
 # --------------------------------------------------------------------------
 # Baseline layouts (paper Sec. 4.2 accounting)
 # --------------------------------------------------------------------------

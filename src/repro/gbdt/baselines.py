@@ -29,12 +29,15 @@ from repro.gbdt.trainer import GBDTConfig, _grow_tree, train_jit
 
 
 def quantize_forest(forest: Forest) -> Forest:
-    """fp16-round thresholds and leaf values (the paper's 'quantized' baseline)."""
-    return dataclasses.replace(
-        forest,
-        edges=forest.edges.astype(jnp.float16).astype(jnp.float32),
-        leaf_values=forest.leaf_values.astype(jnp.float16).astype(jnp.float32),
-    )
+    """fp16-round thresholds and leaf values (the paper's 'quantized' baseline).
+
+    Composed from the compression pipeline's transforms — the same code the
+    ``threshold_width`` (``threshold_precision="f16"``) and ``leaf_f16``
+    stages execute, so the baseline and the pipeline cannot drift apart.
+    """
+    from repro.core.pipeline import fp16_edges, fp16_leaf_values
+
+    return fp16_leaf_values(fp16_edges(forest))
 
 
 # --------------------------------------------------------------------------

@@ -46,7 +46,7 @@ def train_data_parallel(
     penalty_feature=None,
     penalty_threshold=None,
     forestsize=None,
-    hist_quant_bits: int = 0,
+    hist_quant_bits: int | None = None,
 ):
     """Train with rows sharded over ``mesh[axis]``.
 
@@ -54,7 +54,21 @@ def train_data_parallel(
     or simply use `pad_to_shards` with a repeated real row, which only
     perturbs histogram counts by the duplicates.  The returned forest and
     history are replicated; `aux['preds']` stays row-sharded.
+
+    ``hist_quant_bits`` is a DEPRECATED alias for
+    ``GBDTConfig.hist_quant_bits`` (overrides the config when passed).
     """
+    if hist_quant_bits is not None:
+        import dataclasses
+        import warnings
+
+        warnings.warn(
+            "the hist_quant_bits kwarg of train_data_parallel() is "
+            "deprecated; set GBDTConfig(hist_quant_bits=...) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        cfg = dataclasses.replace(cfg, hist_quant_bits=int(hist_quant_bits))
     n_shards = mesh.shape[axis]
     assert bins.shape[0] % n_shards == 0, "rows must divide the data axis"
 
@@ -62,7 +76,6 @@ def train_data_parallel(
         train,
         cfg,
         axis_name=axis,
-        hist_quant_bits=hist_quant_bits,
     )
 
     def shard_fn(bins, y, edges, pf, pt, fs):

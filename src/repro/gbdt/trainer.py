@@ -76,6 +76,9 @@ class GBDTConfig:
                                       # ablation); counts always exact f32
     hist_method: str = "auto"         # auto | ref | fused | pallas (kernels.ops)
     hist_subtract: bool = True        # sibling subtraction at levels >= 1
+    hist_quant_bits: int = 0          # 0 = exact fp32 histogram all-reduce;
+                                      # 8/16 = quantized collectives
+                                      # (data-parallel training only)
 
     @property
     def n_ensembles(self) -> int:
@@ -278,13 +281,15 @@ def train(
     penalty_threshold: jax.Array | float | None = None,
     forestsize: jax.Array | float | None = None,
     axis_name: str | None = None,
-    hist_quant_bits: int = 0,
+    hist_quant_bits: int | None = None,
 ):
     """Train a ToaD-regularized GBDT.  Fully jittable; vmappable over the
     three runtime hyperparameters.
 
     Args:
-      cfg: static configuration.
+      cfg: static configuration (includes ``hist_quant_bits``: 0 = exact
+        fp32 all-reduce; 8/16 = quantized histogram collectives, Shi et
+        al. 2022 style, to cut ICI bytes).
       bins: (n, d) int32 pre-binned features (see gbdt.binning).
       y: (n,) float32 targets (class ids as floats for classification).
       edges: (d, E) float32 bin edges (+inf = invalid candidate).
@@ -293,12 +298,22 @@ def train(
       axis_name: when run under shard_map with rows sharded over this mesh
         axis, histograms/leaf stats/base scores are psum'd so every shard
         grows identical trees (distributed-LightGBM data parallelism).
-      hist_quant_bits: 0 = exact fp32 all-reduce; 8/16 = quantized
-        histogram collectives (Shi et al. 2022 style) to cut ICI bytes.
+      hist_quant_bits: DEPRECATED alias for ``cfg.hist_quant_bits`` (every
+        other knob lives on the config); overrides the config when passed.
 
     Returns:
       (Forest, history dict of per-round arrays, aux dict).
     """
+    if hist_quant_bits is not None:
+        import warnings
+
+        warnings.warn(
+            "the hist_quant_bits kwarg of train() is deprecated; set "
+            "GBDTConfig(hist_quant_bits=...) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        cfg = dataclasses.replace(cfg, hist_quant_bits=int(hist_quant_bits))
     loss = make_loss(cfg.task, cfg.n_classes)
     C = loss.n_ensembles
     n, d = bins.shape
@@ -315,10 +330,11 @@ def train(
 
     if axis_name is None:
         reduce_fn = None
-    elif hist_quant_bits:
+    elif cfg.hist_quant_bits:
         from repro.distributed.collectives import quantized_psum
 
-        reduce_fn = lambda x: quantized_psum(x, axis_name, bits=hist_quant_bits)
+        qbits = cfg.hist_quant_bits
+        reduce_fn = lambda x: quantized_psum(x, axis_name, bits=qbits)
         # sibling subtraction would derive right children from histograms that
         # were quantized once per level, compounding quantization error along
         # right-descending paths (up to max_depth quantization events); with

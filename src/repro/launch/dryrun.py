@@ -333,9 +333,9 @@ def run_gbdt_cell(multi_pod: bool):
     def compile_rounds(n_rounds):
         gcfg = dataclasses.replace(
             wl.gbdt, n_rounds=n_rounds,
-            hist_dtype=os.environ.get("TOAD_HIST_DTYPE", "f32"))
-        fn = lambda b, yy, e: train(gcfg, b, yy, e, axis_name="data",
-                            hist_quant_bits=int(os.environ.get("TOAD_HIST_QUANT", "0")))
+            hist_dtype=os.environ.get("TOAD_HIST_DTYPE", "f32"),
+            hist_quant_bits=int(os.environ.get("TOAD_HIST_QUANT", "0")))
+        fn = lambda b, yy, e: train(gcfg, b, yy, e, axis_name="data")
         sharded = compat.shard_map(
             fn, mesh=mesh,
             in_specs=(P("data"), P("data"), P()),

@@ -11,6 +11,10 @@
     PYTHONPATH=src python -m repro.launch.serve --arch toad-gbdt \
         --backend reference --smoke
 
+    # GBDT path from a prebuilt, versioned .toad artifact (no retraining):
+    PYTHONPATH=src python -m repro.launch.serve --arch toad-gbdt \
+        --model model.toad --smoke
+
 On production meshes the LM functions lower against the sequence-sharded
 cache (see launch/dryrun.py decode cells); here the reduced configs run the
 actual loops on CPU to prove both serving paths end to end.
@@ -94,8 +98,11 @@ def serve_lm(args) -> None:
 
 
 def serve_gbdt(args) -> dict:
-    """Train a small ToaD model, compress it, and serve raw-feature requests
-    through the micro-batching engine and the chosen predictor backend."""
+    """Serve raw-feature requests through the micro-batching engine and the
+    chosen predictor backend.  With ``--model path.toad`` a prebuilt
+    artifact is loaded (fingerprint-verified) and served directly — no
+    in-process training; otherwise a small ToaD model is trained and
+    compressed on the spot."""
     import threading
 
     import numpy as np
@@ -107,17 +114,32 @@ def serve_gbdt(args) -> dict:
     if backend != "auto":
         get_backend(backend)  # fail fast on a typo'd name, before training
 
-    # always the reduced workload: the full config is the 16.7M-row dry-run
-    # shape, not something to train in-process on a serving host
-    wl = get_gbdt_config(args.arch, reduced=True)
     n_requests = 256 if args.smoke else args.requests
     rng = np.random.default_rng(0)
-    X = rng.normal(size=(wl.rows, wl.n_features)).astype(np.float32)
-    y = (X[:, 0] - X[:, 1] + 0.3 * X[:, 2] ** 2 > 0).astype(np.float32)
+    if getattr(args, "model", None):
+        print(f"loading prebuilt artifact {args.model} ...")
+        model = ToadModel.load(args.model)
+        if not model.is_compressed:
+            model.compress()
+        meta = model.artifact_meta or {}
+        manifest = meta.get("manifest", {})
+        spec = meta.get("spec") or {}
+        print(f"artifact: format v{meta.get('format_version', 1)}, "
+              f"spec {spec.get('name', 'pre-spec')!r}, "
+              f"{manifest.get('encoded_stream_bytes', 0):.0f} B encoded, "
+              f"{manifest.get('n_trees', int(model.forest.n_trees))} trees")
+        d = model.forest.n_features
+        X = rng.normal(size=(max(n_requests, 256), d)).astype(np.float32)
+    else:
+        # always the reduced workload: the full config is the 16.7M-row
+        # dry-run shape, not something to train in-process on a serving host
+        wl = get_gbdt_config(args.arch, reduced=True)
+        X = rng.normal(size=(wl.rows, wl.n_features)).astype(np.float32)
+        y = (X[:, 0] - X[:, 1] + 0.3 * X[:, 2] ** 2 > 0).astype(np.float32)
 
-    print(f"training toad-gbdt (rows={wl.rows}, d={wl.n_features}, "
-          f"rounds={wl.gbdt.n_rounds}, depth={wl.gbdt.max_depth}) ...")
-    model = ToadModel(config=wl.gbdt, n_bins=wl.n_bins).fit(X, y).compress()
+        print(f"training toad-gbdt (rows={wl.rows}, d={wl.n_features}, "
+              f"rounds={wl.gbdt.n_rounds}, depth={wl.gbdt.max_depth}) ...")
+        model = ToadModel(config=wl.gbdt, n_bins=wl.n_bins).fit(X, y).compress()
     report = model.memory_report()
     print(f"model: {int(report['n_trees'])} trees, "
           f"{report['toad_bytes']:.0f} B ToaD stream "
@@ -129,7 +151,7 @@ def serve_gbdt(args) -> dict:
         model, backend=None if backend == "auto" else backend,
         max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
     )
-    queries = X[rng.integers(0, wl.rows, size=n_requests)]
+    queries = X[rng.integers(0, X.shape[0], size=n_requests)]
     errs = []
 
     def client(lo: int, hi: int):
@@ -173,6 +195,9 @@ def main():
     # GBDT engine
     ap.add_argument("--backend", default="auto",
                     help="predictor backend: auto|reference|packed|pallas")
+    ap.add_argument("--model", default=None,
+                    help="path to a prebuilt .toad artifact; serves it "
+                         "directly instead of training in-process")
     ap.add_argument("--requests", type=int, default=2048)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=256)

@@ -1,0 +1,233 @@
+"""The versioned .toad deployment artifact: round-trips across specs and
+backends, format-version rejection, legacy (pre-spec) loads, fingerprint
+verification, and the serve-from-artifact path."""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    TOAD_FORMAT_VERSION,
+    ArtifactError,
+    CompressionSpec,
+    GBDTEngine,
+    ToadModel,
+    load_artifact,
+)
+from repro.api.model import _FOREST_FIELDS
+
+SPECS = [
+    ("exact", CompressionSpec.exact),
+    ("fp16-leaves", CompressionSpec.fp16_leaves),
+    ("codebook-4bit", lambda: CompressionSpec.codebook(4)),
+]
+
+
+def _fit(rng, task="binary", n_classes=0, **over):
+    n, d = 400, 6
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    if task == "regression":
+        y = X[:, 0] * 2 + np.sin(X[:, 1])
+    elif task == "binary":
+        y = (X[:, 0] + X[:, 1] ** 2 > 0.7).astype(np.float32)
+    else:
+        y = np.digitize(X[:, 0], [-0.5, 0.5]).astype(np.float32)
+    kw = dict(n_rounds=8, max_depth=3, learning_rate=0.3,
+              toad_penalty_feature=1.0, toad_penalty_threshold=0.5)
+    kw.update(over)
+    model = ToadModel(task=task, n_classes=n_classes, n_bins=16, **kw)
+    return model.fit(X, y.astype(np.float32)), X
+
+
+def _rewrite_npz(src, dst, mutate):
+    """Load an artifact's raw arrays, apply ``mutate(dict)``, write back."""
+    with np.load(src) as z:
+        arrays = {k: np.array(z[k]) for k in z.files}
+    mutate(arrays)
+    with open(dst, "wb") as f:
+        np.savez_compressed(f, **arrays)
+    return dst
+
+
+# --------------------------------------------------------------- round-trips
+@pytest.mark.parametrize("spec_name,spec_fn", SPECS)
+@pytest.mark.parametrize("task,n_classes", [("binary", 0), ("multiclass", 3)])
+def test_roundtrip_parity_all_backends(rng, tmp_path, spec_name, spec_fn,
+                                       task, n_classes):
+    """save -> load -> predict parity across every backend for each spec."""
+    model, X = _fit(rng, task, n_classes)
+    model.compress(spec=spec_fn())
+    ref = model.predict(X)
+    path = model.save(str(tmp_path / f"m-{spec_name}.toad"))
+    restored = ToadModel.load(path)
+    assert restored.is_compressed
+    assert restored.spec == model.spec
+    assert restored.encoded.n_bits == model.encoded.n_bits
+    np.testing.assert_array_equal(restored.encoded.data, model.encoded.data)
+    backends = ["reference", "packed"]
+    if jax.default_backend() == "tpu":
+        backends.append("pallas")
+    for b in backends:
+        np.testing.assert_allclose(restored.predict(X, backend=b), ref,
+                                   rtol=1e-5, atol=1e-5, err_msg=b)
+
+
+def test_uncompressed_model_roundtrip(rng, tmp_path):
+    """A fitted-but-uncompressed model saves/loads too (no stream in the
+    bundle); compression can then happen on the loading side."""
+    model, X = _fit(rng)
+    ref = model.predict(X)
+    path = model.save(str(tmp_path / "raw.toad"))
+    restored = ToadModel.load(path)
+    assert not restored.is_compressed
+    np.testing.assert_allclose(restored.predict(X), ref, rtol=1e-6, atol=1e-6)
+    restored.compress(budget_bytes=1e9)
+    assert restored.is_compressed
+
+
+def test_artifact_meta_contents(rng, tmp_path):
+    model, _ = _fit(rng)
+    model.compress(budget_bytes=1e9)
+    path = model.save(str(tmp_path / "m.toad"))
+    restored = ToadModel.load(path)
+    meta = restored.artifact_meta
+    assert meta["format_version"] == TOAD_FORMAT_VERSION
+    assert meta["spec"]["name"] == "exact"
+    man = meta["manifest"]
+    assert man["encoded_stream_bytes"] == model.encoded.n_bytes
+    assert man["sections"]["total_bytes"] == pytest.approx(man["toad_bytes"])
+    assert meta["fingerprint"]["stream_sha256"]
+    assert meta["fingerprint"]["pred_atol"] > 0
+    assert meta["report"]["fits"] is True
+
+
+def test_save_path_written_verbatim(rng, tmp_path):
+    """'model.toad' must not become 'model.toad.npz'."""
+    model, _ = _fit(rng)
+    path = str(tmp_path / "model.toad")
+    assert model.save(path) == path
+    assert (tmp_path / "model.toad").exists()
+    assert not (tmp_path / "model.toad.npz").exists()
+
+
+# ----------------------------------------------------------- format version
+def test_future_format_version_rejected(rng, tmp_path):
+    model, _ = _fit(rng)
+    model.compress()
+    src = model.save(str(tmp_path / "ok.toad"))
+
+    def bump(arrays):
+        meta = json.loads(bytes(arrays["meta_json"].tobytes()).decode())
+        meta["format_version"] = TOAD_FORMAT_VERSION + 97
+        arrays["meta_json"] = np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8
+        )
+
+    bad = _rewrite_npz(src, str(tmp_path / "future.toad"), bump)
+    with pytest.raises(ArtifactError, match="format version"):
+        ToadModel.load(bad)
+
+
+def test_not_an_artifact_rejected(tmp_path):
+    path = str(tmp_path / "junk.toad")
+    with open(path, "wb") as f:
+        np.savez_compressed(f, foo=np.zeros(3))
+    with pytest.raises(ArtifactError, match="meta_json"):
+        load_artifact(path)
+
+
+def test_legacy_pre_spec_npz_loads(rng, tmp_path):
+    """A PR-2 era bundle (no format_version, no spec/manifest/fingerprint)
+    must load as legacy v1 and predict identically."""
+    model, X = _fit(rng, "multiclass", 3)
+    model.compress()
+    ref = model.predict(X)
+    path = str(tmp_path / "legacy.npz")
+    arrays = {f: np.asarray(getattr(model.forest, f)) for f in _FOREST_FIELDS}
+    cfg = dataclasses.asdict(model.config)
+    cfg.pop("hist_quant_bits")  # the field postdates the legacy format
+    meta = {
+        "config": cfg,
+        "n_bins": model.n_bins,
+        "n_ensembles": model.forest.n_ensembles,
+        "compressed": True,
+    }
+    arrays["meta_json"] = np.frombuffer(json.dumps(meta).encode(), np.uint8)
+    arrays["toad_stream"] = model.encoded.data
+    arrays["toad_stream_bits"] = np.asarray(model.encoded.n_bits, np.int64)
+    np.savez_compressed(path, **arrays)
+
+    restored = ToadModel.load(path)
+    assert restored.is_compressed
+    assert restored.spec is None  # pre-spec bundle
+    np.testing.assert_allclose(restored.predict(X), ref, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(restored.predict(X, backend="packed"), ref,
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- fingerprint
+def test_fingerprint_catches_tampered_arrays(rng, tmp_path):
+    model, _ = _fit(rng)
+    model.compress()
+    src = model.save(str(tmp_path / "ok.toad"))
+
+    def corrupt(arrays):
+        lv = arrays["leaf_values"].copy()
+        lv[: max(int(model.forest.n_leaf_values), 1)] += 0.5
+        arrays["leaf_values"] = lv
+
+    bad = _rewrite_npz(src, str(tmp_path / "tampered.toad"), corrupt)
+    with pytest.raises(ArtifactError, match="fingerprint"):
+        ToadModel.load(bad)
+    # opt-out for forensics
+    m = ToadModel.load(bad, verify=False)
+    assert m.is_fitted
+
+
+def test_fingerprint_catches_corrupted_stream(rng, tmp_path):
+    """A flipped bit in the encoded stream must fail verification *before*
+    it reaches the packed/pallas serving path."""
+    model, _ = _fit(rng)
+    model.compress()
+    src = model.save(str(tmp_path / "ok.toad"))
+
+    def flip(arrays):
+        stream = arrays["toad_stream"].copy()
+        stream[len(stream) // 2] ^= 0x10
+        arrays["toad_stream"] = stream
+
+    bad = _rewrite_npz(src, str(tmp_path / "flipped.toad"), flip)
+    with pytest.raises(ArtifactError, match="stream"):
+        ToadModel.load(bad)
+
+
+# ------------------------------------------------------------------ serving
+def test_engine_accepts_artifact_path(rng, tmp_path):
+    model, X = _fit(rng)
+    model.compress(spec=CompressionSpec.codebook(4))
+    path = model.save(str(tmp_path / "serve.toad"))
+    engine = GBDTEngine(path, backend="packed", max_batch=16, max_wait_ms=1.0)
+    ref = model.predict(X[:48], backend="packed")
+    with engine:
+        futs = [engine.submit(X[i]) for i in range(48)]
+        out = np.stack([f.result() for f in futs])
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_serve_cli_from_artifact(rng, tmp_path):
+    """serve.py --model path.toad serves a prebuilt artifact (no training)."""
+    import argparse
+
+    from repro.launch.serve import serve_gbdt
+
+    model, _ = _fit(rng)
+    model.compress()
+    path = model.save(str(tmp_path / "cli.toad"))
+    ns = argparse.Namespace(arch="toad-gbdt", backend="reference", requests=64,
+                            clients=2, max_batch=32, max_wait_ms=1.0,
+                            smoke=True, model=path)
+    out = serve_gbdt(ns)
+    assert out["req_per_s"] > 0

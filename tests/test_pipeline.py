@@ -1,0 +1,266 @@
+"""The staged CompressionPipeline: spec-driven compress, per-stage reports,
+budget-targeted search, and the default-spec byte-identity contract."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import CompressionSpec, ToadModel, get_backend, resolve_backend
+from repro.core import (
+    encode,
+    get_stage,
+    list_stages,
+    run_pipeline,
+    search_budget,
+    stream_sections,
+    toad_bits_host,
+)
+from repro.core.pipeline import fp16_edges, fp16_leaf_table, fp16_leaf_values
+from repro.gbdt.baselines import quantize_forest
+
+
+def _fit(rng, task="binary", n_classes=0, **over):
+    n, d = 400, 6
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    if task == "regression":
+        y = X[:, 0] * 2 + np.sin(X[:, 1])
+    elif task == "binary":
+        y = (X[:, 0] + X[:, 1] ** 2 > 0.7).astype(np.float32)
+    else:
+        y = np.digitize(X[:, 0], [-0.5, 0.5]).astype(np.float32)
+    kw = dict(n_rounds=10, max_depth=3, learning_rate=0.3,
+              toad_penalty_feature=1.0, toad_penalty_threshold=0.5)
+    kw.update(over)
+    model = ToadModel(task=task, n_classes=n_classes, n_bins=16, **kw)
+    return model.fit(X, y.astype(np.float32)), X
+
+
+# ----------------------------------------------------------- default parity
+def test_default_compress_byte_identical(rng):
+    """No-arg compress() must reproduce the historical encode() stream byte
+    for byte and leave the forest (hence predictions) untouched."""
+    model, X = _fit(rng)
+    forest_before = model.forest
+    direct = encode(model.forest)
+    preds_before = model.predict(X)
+    model.compress()
+    assert model.forest is forest_before
+    assert model.encoded.n_bits == direct.n_bits
+    np.testing.assert_array_equal(model.encoded.data, direct.data)
+    np.testing.assert_array_equal(model.predict(X), preds_before)
+    rep = model.compression_report
+    assert rep.spec.name == "exact"
+    assert rep.max_abs_pred_delta == 0.0
+    assert [s.stage for s in rep.stages] == ["threshold_width", "encode", "pack"]
+    assert all(s.max_abs_pred_delta == 0.0 for s in rep.stages)
+
+
+def test_spec_json_roundtrip():
+    spec = CompressionSpec.codebook(3, iters=5)
+    restored = CompressionSpec.from_json(spec.to_json())
+    assert restored == spec
+    # dict form too (what lands in the .toad meta)
+    assert CompressionSpec.from_dict(json.loads(spec.to_json())) == spec
+
+
+def test_unknown_stage_is_self_diagnosing():
+    with pytest.raises(KeyError, match="leaf_f16"):
+        get_stage("leaf_f17")
+    assert {"threshold_width", "leaf_f16", "leaf_codebook", "encode",
+            "pack"} <= set(list_stages())
+
+
+def test_spec_without_pack_rejected_by_model(rng):
+    model, _ = _fit(rng)
+    with pytest.raises(ValueError, match="pack"):
+        model.compress(spec=CompressionSpec(stages=("threshold_width", "encode")))
+    with pytest.raises(ValueError, match="not both"):
+        model.compress(spec=CompressionSpec.exact(), budget_bytes=100)
+
+
+# ----------------------------------------------------------- lossy stages
+@pytest.mark.parametrize("spec_fn,tol", [
+    (CompressionSpec.fp16_leaves, 5e-3),
+    (lambda: CompressionSpec.codebook(4), 1.0),
+])
+def test_lossy_specs_keep_backend_parity(rng, spec_fn, tol):
+    """A lossy spec replaces the model's forest, so every backend (the
+    reference one included) must agree on the *deployed* model."""
+    model, X = _fit(rng)
+    exact = model.predict(X)
+    model.compress(spec=spec_fn())
+    rep = model.compression_report
+    out = {b: model.predict(X, backend=b) for b in ("reference", "packed")}
+    np.testing.assert_allclose(out["reference"], out["packed"],
+                               rtol=1e-5, atol=1e-5)
+    # the reported probe delta bounds the same order of magnitude of drift
+    assert rep.max_abs_pred_delta < tol
+    assert np.abs(out["reference"] - exact).max() < tol
+    # recompression restarts from the exact forest
+    model.compress()
+    np.testing.assert_array_equal(model.predict(X), exact)
+
+
+def test_codebook_shrinks_leaf_table_and_stream(rng):
+    model, _ = _fit(rng, n_rounds=16)
+    exact_bytes = encode(model.forest).n_bytes
+    v_before = int(model.forest.n_leaf_values)
+    model.compress(spec=CompressionSpec.codebook(3))
+    assert int(model.forest.n_leaf_values) <= 8 < v_before
+    assert model.encoded.n_bytes < exact_bytes
+    stage = {s.stage: s for s in model.compression_report.stages}["leaf_codebook"]
+    assert stage.bytes_after < stage.bytes_before
+    assert stage.max_abs_pred_delta > 0.0
+    assert stage.info["leaf_ref_bits"] <= 3
+
+
+def test_fp16_leaf_table_merges_without_extra_error(rng):
+    model, X = _fit(rng)
+    merged = fp16_leaf_table(model.forest)
+    rounded = fp16_leaf_values(model.forest)
+    # merging is value-exact: identical predictions to plain fp16 rounding
+    import jax.numpy as jnp
+
+    from repro.gbdt.forest import predict_raw
+
+    np.testing.assert_array_equal(
+        np.asarray(predict_raw(merged, jnp.asarray(X))),
+        np.asarray(predict_raw(rounded, jnp.asarray(X))),
+    )
+    assert int(merged.n_leaf_values) <= int(rounded.n_leaf_values)
+
+
+def test_quantize_forest_is_pipeline_composition(rng):
+    """The Sec. 4.2 'quantized' baseline is exactly fp16 edges + fp16 leaves
+    from the pipeline's transform functions."""
+    model, _ = _fit(rng)
+    q = quantize_forest(model.forest)
+    ref = fp16_leaf_values(fp16_edges(model.forest))
+    np.testing.assert_array_equal(np.asarray(q.edges), np.asarray(ref.edges))
+    np.testing.assert_array_equal(
+        np.asarray(q.leaf_values), np.asarray(ref.leaf_values)
+    )
+
+
+def test_threshold_f16_spec(rng):
+    model, X = _fit(rng)
+    spec = dataclasses.replace(CompressionSpec.exact(), threshold_precision="f16",
+                               name="f16-thresholds")
+    model.compress(spec=spec)
+    stage = model.compression_report.stages[0]
+    assert stage.stage == "threshold_width"
+    assert stage.info["precision"] == "f16"
+    edges = np.asarray(model.forest.edges)
+    finite = edges[np.isfinite(edges)]
+    np.testing.assert_array_equal(finite,
+                                  finite.astype(np.float16).astype(np.float32))
+
+
+# ----------------------------------------------------------- budget search
+def test_budget_search_fits_and_reports(rng):
+    model, X = _fit(rng, n_rounds=16)
+    exact_bytes = encode(model.forest).n_bytes
+    budget = exact_bytes * 0.7
+    model.compress(budget_bytes=budget)
+    rep = model.compression_report
+    assert model.encoded.n_bytes <= budget
+    assert rep.fits is True and rep.budget_bytes == pytest.approx(budget)
+    assert rep.ladder, "ladder trace missing"
+    assert rep.ladder[0]["spec"] == "exact" and not rep.ladder[0]["fits"]
+    assert rep.ladder[-1]["fits"]
+    # accuracy delta vs the exact model is part of the report
+    assert rep.max_abs_pred_delta >= 0.0
+    assert all("max_abs_pred_delta" in rung for rung in rep.ladder)
+
+
+def test_budget_search_trivially_fits_stays_exact(rng):
+    model, X = _fit(rng)
+    preds = model.predict(X)
+    model.compress(budget_bytes=encode(model.forest).n_bytes + 1)
+    assert model.compression_report.spec.name == "exact"
+    np.testing.assert_array_equal(model.predict(X), preds)
+
+
+def test_budget_search_impossible_budget_raises(rng):
+    model, _ = _fit(rng)
+    with pytest.raises(ValueError, match="no compression plan fits"):
+        model.compress(budget_bytes=8)
+    # the model keeps its previous (un)compressed state on failure
+    assert not model.is_compressed
+
+
+def test_search_budget_direct_api(rng):
+    model, _ = _fit(rng, n_rounds=16)
+    res = search_budget(model.forest, encode(model.forest).n_bytes * 0.7)
+    assert res.encoded.n_bytes <= encode(model.forest).n_bytes * 0.7
+    assert res.packed is not None
+
+
+def test_search_budget_rejects_encodeless_ladder_rung(rng):
+    model, _ = _fit(rng)
+    bad = (CompressionSpec(stages=("threshold_width", "leaf_f16"), name="no-enc"),)
+    with pytest.raises(ValueError, match="'encode' stage"):
+        search_budget(model.forest, 1e9, ladder=bad)
+
+
+# ----------------------------------------------------------- accounting
+def test_stream_sections_sum_to_stream(rng):
+    model, _ = _fit(rng)
+    sections = stream_sections(model.forest)
+    parts = [v for k, v in sections.items() if k != "total_bytes"]
+    assert sum(parts) == pytest.approx(sections["total_bytes"])
+    assert sections["total_bytes"] == pytest.approx(toad_bits_host(model.forest) / 8.0)
+
+
+# ----------------------------------------------------------- satellites
+def test_memory_report_pre_compression(rng):
+    model, _ = _fit(rng)
+    rep = model.memory_report()
+    assert rep["encoded_stream_basis"] == "estimated"
+    assert rep["encoded_stream_bytes"] == rep["toad_bytes"]
+    model.compress()
+    rep2 = model.memory_report()
+    assert rep2["encoded_stream_basis"] == "encoded"
+    assert rep2["encoded_stream_bytes"] == rep["encoded_stream_bytes"]
+    assert rep2["compression_spec"] == "exact"
+
+
+def test_backend_error_lists_registered_and_available():
+    with pytest.raises(KeyError) as ei:
+        get_backend("packd")
+    msg = str(ei.value)
+    assert "registered: packed, pallas, reference" in msg
+    assert "available on this platform" in msg
+    with pytest.raises(KeyError, match="registered:"):
+        resolve_backend("packd", compressed=True)
+
+
+def test_hist_quant_bits_config_field_and_deprecated_alias(rng, mesh22):
+    """The knob lives on GBDTConfig; the old train() kwarg still works but
+    warns.  Both must grow identical trees."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+
+    from repro.gbdt import GBDTConfig, apply_bins, fit_bins
+    from repro.gbdt.distributed import pad_to_shards, train_data_parallel
+
+    X = rng.normal(size=(64, 4)).astype(np.float32)
+    y = (X[:, 0] > 0).astype(np.float32)
+    edges = jnp.asarray(fit_bins(X, 8))
+    bins = apply_bins(jnp.asarray(X), edges)
+    bins = jnp.asarray(pad_to_shards(np.asarray(bins), 2))
+    y_p = jnp.asarray(pad_to_shards(y, 2))
+    cfg = GBDTConfig(task="binary", n_rounds=2, max_depth=2)
+
+    f_cfg, _, _ = train_data_parallel(
+        dc.replace(cfg, hist_quant_bits=16), bins, y_p, edges, mesh22
+    )
+    with pytest.warns(DeprecationWarning, match="hist_quant_bits"):
+        f_kw, _, _ = train_data_parallel(
+            cfg, bins, y_p, edges, mesh22, hist_quant_bits=16
+        )
+    np.testing.assert_array_equal(np.asarray(f_cfg.feature), np.asarray(f_kw.feature))
+    np.testing.assert_array_equal(np.asarray(f_cfg.is_split), np.asarray(f_kw.is_split))
