@@ -23,6 +23,53 @@ def save_json(name: str, payload):
         json.dump(payload, f, indent=2, default=float)
 
 
+def compose_specs():
+    """The CompressionSpec ladder the fig6/fig7 sweeps compose with the
+    training-time penalty grid: exact baseline, the paper's fp16 leaves,
+    a leaf codebook, a threshold codebook, and the LIMITS-style full
+    shared-table plan."""
+    from repro.core import CompressionSpec
+
+    return (
+        CompressionSpec.exact(),
+        CompressionSpec.fp16_leaves(),
+        CompressionSpec.codebook(4),
+        CompressionSpec.thr_codebook(6),
+        CompressionSpec.codebook_full(6, 4),
+    )
+
+
+def sweep_specs(forest, specs, x_test, y_test, loss):
+    """Run each spec's pipeline on a trained forest; one row per spec.
+
+    The test metric is evaluated with ``predict_raw`` on the *transformed*
+    forest (its own edges), not on bins from the exact model — a lossy spec
+    moves the thresholds, so pre-binned inputs would silently evaluate the
+    wrong model.
+    """
+    from repro.core import encode, run_pipeline
+    from repro.gbdt.forest import predict_raw
+
+    x_test = jnp.asarray(np.asarray(x_test, np.float32))
+    y_test = jnp.asarray(np.asarray(y_test, np.float32))
+    base_encoded = encode(forest)  # shared across specs: encode the base once
+    exact_bytes = None
+    rows = []
+    for spec in specs:
+        res = run_pipeline(forest, spec, base_encoded=base_encoded)
+        nb = res.encoded.n_bytes
+        if exact_bytes is None and spec.name == "exact":
+            exact_bytes = nb
+        rows.append({
+            "spec": spec.name,
+            "n_bytes": nb,
+            "ratio_vs_exact": (exact_bytes / nb) if exact_bytes else None,
+            "max_pred_delta": res.report.max_abs_pred_delta,
+            "metric": float(loss.metric(y_test, predict_raw(res.forest, x_test))),
+        })
+    return rows
+
+
 def cumulative_metrics(forest: Forest, bins, y, loss):
     """Per-round test metric: exploit additivity — traverse each tree once
     and evaluate the metric on every prefix of the ensemble."""

@@ -26,14 +26,16 @@ DEPTHS = [2, 3]
 def stage_breakdown(dataset: str, model: ToadModel) -> list[dict]:
     """Per-stage compressed-size report for one representative model.
 
-    Runs the staged CompressionPipeline under three specs (exact, fp16
-    leaves, 4-bit codebook) and records each stage's (bytes_before,
-    bytes_after, max|Δpred|) plus the five-component stream breakdown —
-    the PACSET-style "which bytes live where" view of Fig. 4.
+    Runs the staged CompressionPipeline under four specs (exact, fp16
+    leaves, 4-bit leaf codebook, full shared-table codebook) and records
+    each stage's (bytes_before, bytes_after, max|Δpred|) plus the
+    per-component stream breakdown — the PACSET-style "which bytes live
+    where" view of Fig. 4.  The breakdown follows the stream layout the
+    spec actually produced (shared-threshold-table sections included).
     """
     out = []
     for spec in (CompressionSpec.exact(), CompressionSpec.fp16_leaves(),
-                 CompressionSpec.codebook(4)):
+                 CompressionSpec.codebook(4), CompressionSpec.codebook_full(6, 4)):
         model.compress(spec=spec)
         rep = model.compression_report
         out.append({
@@ -42,7 +44,10 @@ def stage_breakdown(dataset: str, model: ToadModel) -> list[dict]:
             "n_bytes": rep.n_bytes,
             "max_abs_pred_delta": rep.max_abs_pred_delta,
             "stages": [s.as_dict() for s in rep.stages],
-            "sections": stream_sections(model.forest),
+            "sections": stream_sections(
+                model.forest,
+                thr_codebook_bits=model.encoded.thr_codebook_bits,
+            ),
         })
     return out
 

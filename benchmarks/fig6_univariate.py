@@ -1,13 +1,20 @@
 """Paper Fig. 6: univariate sensitivity of ι and ξ — number of used
 features/thresholds, reuse factor ReF, and test quality.  The whole sweep
-is one vmapped jit per dataset (train_grid)."""
+is one vmapped jit per dataset (train_grid).
+
+``run(specs=...)`` additionally sweeps every penalty cell across a list of
+``CompressionSpec`` plans (post-hoc quantization on top of trained-in
+reuse); ``python -m benchmarks.fig6_univariate --specs`` turns it on.  The
+joint penalty-grid x spec product lives in
+``fig7_multivariate.run_spec_compose`` (results/fig67_spec_compose.json).
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import save_json
+from benchmarks.common import compose_specs, save_json, sweep_specs
 from repro.core import reuse_factor
 from repro.data.pipeline import split_dataset
 from repro.data.synth import load
@@ -30,7 +37,7 @@ def _take(forest, i):
 
 
 def run(datasets=("covtype_binary", "california_housing", "wine_quality", "breast_cancer"),
-        n_rounds=64, max_depth=2, n_cap=10000, verbose=True):
+        n_rounds=64, max_depth=2, n_cap=10000, verbose=True, specs=None):
     rows = []
     G = len(PENALTY_GRID)
     for name in datasets:
@@ -52,7 +59,7 @@ def run(datasets=("covtype_binary", "california_housing", "wine_quality", "breas
             for i, pen in enumerate(PENALTY_GRID):
                 f_i = _take(forests, i)
                 metric = float(loss.metric(yte, predict_binned(f_i, bte)))
-                rows.append({
+                row = {
                     "dataset": name, "penalty": which, "value": pen,
                     "n_features": int(hists["n_fu"][i, -1]),
                     "n_thresholds": int(hists["n_thr"][i, -1]),
@@ -60,7 +67,10 @@ def run(datasets=("covtype_binary", "california_housing", "wine_quality", "breas
                     "bytes": float(hists["bytes"][i, -1]),
                     "ReF": reuse_factor(f_i),
                     "metric": metric,
-                })
+                }
+                if specs:
+                    row["specs"] = sweep_specs(f_i, specs, sp.x_test, sp.y_test, loss)
+                rows.append(row)
                 if verbose:
                     print(rows[-1], flush=True)
     save_json("fig6_univariate.json", rows)
@@ -89,5 +99,7 @@ def check_paper_trends(rows):
 
 
 if __name__ == "__main__":
-    rows = run()
+    import sys
+
+    rows = run(specs=compose_specs() if "--specs" in sys.argv else None)
     print(check_paper_trends(rows))

@@ -24,6 +24,15 @@ verbatim) holding
 ``launch/serve.py --model path.toad`` consume artifacts directly, so a
 serving host never retrains.  Pre-versioning bundles (PR-2 era ``.npz``
 without ``format_version``) load as legacy version 1.
+
+**Version negotiation** (PACSET-style: the reader must understand the
+layout before touching the bytes): ``save_artifact`` stamps the *lowest*
+format version that can faithfully represent the bundle — version 2 unless
+the encoded stream uses the shared-threshold-codebook layout, which only a
+version-3 reader can decode.  A loader accepts anything up to
+``TOAD_FORMAT_VERSION`` and rejects newer bundles with a clear error, so an
+old runtime never mis-parses a codebook stream and a new runtime keeps
+loading every old bundle.
 """
 
 from __future__ import annotations
@@ -38,7 +47,9 @@ from repro.core.layout import EncodedModel, decode, to_packed
 from repro.core.memory import compression_summary, stream_sections
 from repro.core.pipeline import CompressionSpec, _predict, probe_inputs
 
-TOAD_FORMAT_VERSION = 2
+# 3 added the shared-threshold-codebook stream layout; bundles that don't
+# use it are still written as version 2 so older runtimes can load them.
+TOAD_FORMAT_VERSION = 3
 
 _FINGERPRINT_N = 32
 _FINGERPRINT_SEED = 7
@@ -64,8 +75,16 @@ def stream_digest(encoded) -> str:
 
 
 def build_manifest(model) -> dict:
-    """Size + shape summary of a fitted (optionally compressed) model."""
+    """Size + shape summary of a fitted (optionally compressed) model.
+
+    ``sections`` follows the stream layout actually encoded: for a
+    shared-threshold-codebook stream it includes the ``thr_codebook_bytes``
+    table section and reference-width threshold bytes (classic streams
+    report ``thr_codebook_bytes: 0.0``), and ``thr_codebook_bits`` records
+    the layout variant for loaders and fleet tooling.
+    """
     forest = model.forest
+    cb_bits = model.encoded.thr_codebook_bits if model.encoded is not None else 0
     summary = compression_summary(forest)
     manifest = {
         "n_trees": int(forest.n_trees),
@@ -74,7 +93,8 @@ def build_manifest(model) -> dict:
         "n_ensembles": forest.n_ensembles,
         "n_leaf_values": int(forest.n_leaf_values),
         "toad_bytes": summary["toad_bytes"],
-        "sections": stream_sections(forest),
+        "thr_codebook_bits": int(cb_bits),
+        "sections": stream_sections(forest, thr_codebook_bits=cb_bits),
     }
     if model.encoded is not None:
         manifest["encoded_stream_bytes"] = model.encoded.n_bytes
@@ -100,8 +120,11 @@ def save_artifact(model, path: str) -> str:
     if model.encoded is not None:
         fingerprint["stream_sha256"] = stream_digest(model.encoded)
     arrays["fingerprint_preds"] = probe_predictions(model.forest)
+    # stamp the lowest version that can represent this bundle: only the
+    # shared-threshold-codebook stream layout needs a version-3 reader
+    cb_bits = model.encoded.thr_codebook_bits if model.encoded is not None else 0
     meta = {
-        "format_version": TOAD_FORMAT_VERSION,
+        "format_version": 3 if cb_bits > 0 else 2,
         "config": dataclasses.asdict(model.config),
         "n_bins": model.n_bins,
         "n_ensembles": model.forest.n_ensembles,
@@ -121,6 +144,8 @@ def save_artifact(model, path: str) -> str:
     if model.encoded is not None:
         arrays["toad_stream"] = model.encoded.data
         arrays["toad_stream_bits"] = np.asarray(model.encoded.n_bits, np.int64)
+        if cb_bits > 0:
+            arrays["toad_stream_cb_bits"] = np.asarray(cb_bits, np.int64)
     with open(path, "wb") as f:
         np.savez_compressed(f, **arrays)
     return path
@@ -164,6 +189,10 @@ def load_artifact(path: str, verify: bool = True):
             model.encoded = EncodedModel(
                 data=np.array(z["toad_stream"], dtype=np.uint8),
                 n_bits=int(z["toad_stream_bits"]),
+                thr_codebook_bits=(
+                    int(z["toad_stream_cb_bits"])
+                    if "toad_stream_cb_bits" in z else 0
+                ),
             )
             if verify and fp and fp.get("stream_sha256"):
                 # check the stream *before* decoding: a flipped bit must not

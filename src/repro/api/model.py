@@ -153,6 +153,7 @@ class ToadModel:
         spec: CompressionSpec | dict | str | None = None,
         budget_bytes: float | None = None,
         probe=None,
+        max_pred_delta: float | None = None,
     ) -> "ToadModel":
         """Run the staged compression pipeline and keep its artifacts.
 
@@ -160,24 +161,34 @@ class ToadModel:
         bit stream, decode -> dense arrays, to_packed -> uint32 node words),
         byte-identical to prior releases.  ``spec`` selects/orders stages
         declaratively (a :class:`CompressionSpec`, its dict, or its JSON);
-        ``budget_bytes`` instead walks the exact -> fp16-leaf -> k-bit
-        codebook ladder and keeps the first plan whose encoded stream fits.
-        The resulting :class:`CompressionReport` lands on
-        ``self.compression_report``; a lossy plan replaces ``self.forest``
-        with the transformed forest so *every* backend (reference included)
-        executes the deployed model.  Recompression always restarts from the
-        exact forest.  Returns self for chaining.
+        ``budget_bytes`` instead walks the budget ladder — exact -> fp16
+        leaves -> leaf codebooks interleaved with shared-threshold-codebook
+        rungs — and keeps the first plan whose encoded stream fits.
+        ``max_pred_delta`` (budget search only) adds an accuracy floor:
+        rungs whose probe-set prediction drift exceeds it are rejected even
+        when their bytes fit.  The resulting :class:`CompressionReport`
+        lands on ``self.compression_report``; a lossy plan replaces
+        ``self.forest`` with the transformed forest so *every* backend
+        (reference included) executes the deployed model.  Recompression
+        always restarts from the exact forest.  Returns self for chaining.
         """
         self._require_fitted()
         if spec is not None and budget_bytes is not None:
             raise ValueError("pass either spec= or budget_bytes=, not both")
+        if max_pred_delta is not None and budget_bytes is None:
+            raise ValueError(
+                "max_pred_delta gates the budget ladder; pass it together "
+                "with budget_bytes"
+            )
         if isinstance(spec, str):
             spec = CompressionSpec.from_json(spec)
         elif isinstance(spec, dict):
             spec = CompressionSpec.from_dict(spec)
         base = self.forest if self._forest_exact is None else self._forest_exact
         if budget_bytes is not None:
-            res = search_budget(base, budget_bytes, probe=probe)
+            res = search_budget(
+                base, budget_bytes, probe=probe, max_pred_delta=max_pred_delta
+            )
         else:
             res = run_pipeline(base, spec, probe=probe)
         if res.packed is None:

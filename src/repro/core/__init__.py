@@ -18,6 +18,7 @@ from repro.core.layout import (
     encode,
     from_packed,
     to_packed,
+    used_threshold_values,
 )
 from repro.core.memory import (
     array_bits,
@@ -33,6 +34,7 @@ from repro.core.pipeline import (
     CompressionReport,
     CompressionSpec,
     CompressionStage,
+    codebook_thresholds,
     default_ladder,
     get_stage,
     list_stages,
@@ -53,6 +55,7 @@ __all__ = [
     "encode",
     "from_packed",
     "to_packed",
+    "used_threshold_values",
     "array_bits",
     "compression_summary",
     "pointer_bits",
@@ -64,6 +67,7 @@ __all__ = [
     "CompressionReport",
     "CompressionSpec",
     "CompressionStage",
+    "codebook_thresholds",
     "default_ladder",
     "get_stage",
     "list_stages",

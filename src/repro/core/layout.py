@@ -16,10 +16,28 @@ Five components, bit-packed back to back:
      "no-split" sentinel) and, if split, a threshold index (⌈log2 max|T^f|⌉
      bits); leaf slots store a leaf-table reference (⌈log2 V⌉ bits).
 
+**Shared-threshold-codebook variant** (``encode(forest,
+thr_codebook_bits=B)``, the ``threshold_codebook`` pipeline stage): instead
+of per-feature threshold values at per-feature widths, the stream carries
+one *global* fp32 threshold table — every distinct threshold value in the
+ensemble stored exactly once — and each feature's threshold list becomes
+``⌈log2 n_cb⌉``-bit references into it (LIMITS-style fully shared tables).
+Sections become:
+
+  1'. metadata as above, plus the codebook entry count (16 bits),
+  2'. feature map without the width/float fields (the table is fp32),
+  3'. the global threshold codebook (n_cb × 32 bits),
+  3''. per-feature reference lists into the codebook,
+  4./5. leaf table and trees, unchanged.
+
+Which variant a stream uses is carried out-of-band on
+:class:`EncodedModel` (``thr_codebook_bits``; 0 = classic layout) and in
+the ``.toad`` manifest, so legacy streams decode exactly as before.
+
 Encoding/decoding is host-side numpy.  ``toad_stream_bits`` in
 ``repro.core.memory`` reproduces the exact stream length in closed form (and
 in jnp, for use inside the jitted trainer); the two are tested against each
-other.
+other (``stream_sections`` covers both layout variants).
 """
 
 from __future__ import annotations
@@ -41,6 +59,8 @@ META_D_BITS = 16
 META_FU_BITS = 16
 META_MAXT_BITS = 16
 META_NLEAF_BITS = 32
+# entry count of the shared threshold codebook (codebook-layout streams only)
+META_NCB_BITS = 16
 
 
 def metadata_bits(n_ensembles: int) -> int:
@@ -87,10 +107,18 @@ def select_width(values: np.ndarray) -> tuple[int, bool]:
 
 @dataclasses.dataclass
 class EncodedModel:
-    """The serialized ToaD artifact."""
+    """The serialized ToaD artifact.
+
+    ``thr_codebook_bits > 0`` marks the shared-threshold-codebook stream
+    layout (the nominal table size is ``<= 2**thr_codebook_bits`` entries);
+    0 is the classic per-feature-width layout.  The flag travels with the
+    stream (and in the ``.toad`` manifest) because the two variants are not
+    self-describing at the bit level.
+    """
 
     data: np.ndarray  # uint8 stream
     n_bits: int       # exact stream length in bits
+    thr_codebook_bits: int = 0
 
     @property
     def n_bytes(self) -> float:
@@ -110,8 +138,27 @@ def _used_sets(forest: Forest):
     return features, {f: sorted(used[f]) for f in features}
 
 
-def encode(forest: Forest) -> EncodedModel:
-    """Serialize a trained forest into the five-component ToaD stream."""
+def used_threshold_values(forest: Forest) -> np.ndarray:
+    """Sorted distinct threshold *values* referenced by any split (f32)."""
+    edges = np.asarray(forest.edges, dtype=np.float32)
+    features, thr_by_feat = _used_sets(forest)
+    if not features:
+        return np.zeros((0,), np.float32)
+    vals = np.concatenate([edges[f, thr_by_feat[f]] for f in features])
+    return np.unique(vals.astype(np.float32))
+
+
+def encode(forest: Forest, thr_codebook_bits: int = 0) -> EncodedModel:
+    """Serialize a trained forest into the five-component ToaD stream.
+
+    ``thr_codebook_bits > 0`` selects the shared-threshold-codebook layout:
+    every distinct threshold value is stored once in a global fp32 table and
+    features reference it with ``⌈log2 n_cb⌉``-bit indices.  The value table
+    is derived from the forest itself (its distinct used thresholds), so the
+    stream stays reproducible from the forest alone; run the
+    ``threshold_codebook`` pipeline stage first to actually shrink the
+    distinct-value count to ``<= 2**thr_codebook_bits``.
+    """
     K = int(forest.n_trees)
     D = forest.max_depth
     C = forest.n_ensembles
@@ -128,13 +175,24 @@ def encode(forest: Forest) -> EncodedModel:
     feat_to_ref = {f: r for r, f in enumerate(features)}
     # Edge-id -> per-feature threshold index.
     thr_to_idx = {f: {e: i for i, e in enumerate(es)} for f, es in thr_by_feat.items()}
-    widths = {f: select_width(edges[f, thr_by_feat[f]]) for f in features}
 
     fu_bits = bits_for(n_fu + 1)          # +1: no-split sentinel
     tidx_bits = bits_for(max_t)
     cnt_bits = bits_for(max_t)
     leaf_bits = bits_for(n_leaf)
     fidx_bits = bits_for(d)
+
+    cb_table = None
+    if thr_codebook_bits > 0:
+        cb_table = used_threshold_values(forest)
+        if len(cb_table) >= 2**META_NCB_BITS:
+            raise ValueError(
+                f"threshold codebook has {len(cb_table)} entries; the "
+                f"{META_NCB_BITS}-bit count field caps it at "
+                f"{2**META_NCB_BITS - 1}"
+            )
+    else:
+        widths = {f: select_width(edges[f, thr_by_feat[f]]) for f in features}
 
     w = BitWriter()
     # (1) metadata
@@ -148,25 +206,47 @@ def encode(forest: Forest) -> EncodedModel:
     for c in range(C):
         w.write_f32(float(np.asarray(forest.base_score)[c]))
 
-    # (2) feature & threshold map
-    for f in features:
-        width, is_float = widths[f]
-        w.write(f, fidx_bits)
-        w.write(int(np.log2(width)), 3)
-        w.write(1 if is_float else 0, 1)
-        w.write(len(thr_by_feat[f]) - 1, cnt_bits)
+    if cb_table is not None:
+        # (1') codebook entry count, (2') slim feature map, (3') the shared
+        # fp32 threshold table, (3'') per-feature references into it
+        n_cb = len(cb_table)
+        cb_ref_bits = bits_for(n_cb)
+        w.write(n_cb, META_NCB_BITS)
+        for f in features:
+            w.write(f, fidx_bits)
+            w.write(len(thr_by_feat[f]) - 1, cnt_bits)
+        for v in cb_table.tolist():
+            w.write_f32(float(v))
+        for f in features:
+            refs = np.searchsorted(cb_table, edges[f, thr_by_feat[f]].astype(np.float32))
+            for ref, e in zip(refs.tolist(), thr_by_feat[f]):
+                if cb_table[ref] != np.float32(edges[f, e]):
+                    raise ValueError(
+                        f"threshold {edges[f, e]!r} of feature {f} is not in "
+                        f"the shared codebook — encode() derives the table "
+                        f"from the forest, so this indicates corruption"
+                    )
+                w.write(int(ref), cb_ref_bits)
+    else:
+        # (2) feature & threshold map
+        for f in features:
+            width, is_float = widths[f]
+            w.write(f, fidx_bits)
+            w.write(int(np.log2(width)), 3)
+            w.write(1 if is_float else 0, 1)
+            w.write(len(thr_by_feat[f]) - 1, cnt_bits)
 
-    # (3) global thresholds
-    for f in features:
-        width, is_float = widths[f]
-        for e in thr_by_feat[f]:
-            v = float(edges[f, e])
-            if is_float and width == 32:
-                w.write_f32(v)
-            elif is_float and width == 16:
-                w.write_f16(v)
-            else:
-                w.write(int(round(v)), width)
+        # (3) global thresholds
+        for f in features:
+            width, is_float = widths[f]
+            for e in thr_by_feat[f]:
+                v = float(edges[f, e])
+                if is_float and width == 32:
+                    w.write_f32(v)
+                elif is_float and width == 16:
+                    w.write_f16(v)
+                else:
+                    w.write(int(round(v)), width)
 
     # (4) global leaf values (fp32, shared across all trees/ensembles)
     for v in leaf_values.tolist():
@@ -188,7 +268,10 @@ def encode(forest: Forest) -> EncodedModel:
         for j in range(2**D):
             w.write(int(lref_arr[t, j]), leaf_bits)
 
-    return EncodedModel(data=w.getvalue(), n_bits=w.n_bits)
+    return EncodedModel(
+        data=w.getvalue(), n_bits=w.n_bits,
+        thr_codebook_bits=int(thr_codebook_bits),
+    )
 
 
 # --------------------------------------------------------------------------
@@ -258,27 +341,41 @@ def decode(model: EncodedModel) -> DecodedModel:
     fidx_bits = bits_for(d)
 
     feat_input = np.zeros(n_fu, dtype=np.int32)
-    feat_width = np.zeros(n_fu, dtype=np.int32)
-    feat_isfloat = np.zeros(n_fu, dtype=bool)
     feat_count = np.zeros(n_fu, dtype=np.int32)
-    for i in range(n_fu):
-        feat_input[i] = r.read(fidx_bits)
-        feat_width[i] = 2 ** r.read(3)
-        feat_isfloat[i] = bool(r.read(1))
-        feat_count[i] = r.read(cnt_bits) + 1
+    if model.thr_codebook_bits > 0:
+        n_cb = r.read(META_NCB_BITS)
+        cb_ref_bits = bits_for(n_cb)
+        for i in range(n_fu):
+            feat_input[i] = r.read(fidx_bits)
+            feat_count[i] = r.read(cnt_bits) + 1
+        cb_table = np.array([r.read_f32() for _ in range(n_cb)], np.float32)
+        thr_offsets = np.zeros(n_fu + 1, dtype=np.int32)
+        np.cumsum(feat_count, out=thr_offsets[1:])
+        thr_table = np.zeros(int(thr_offsets[-1]), dtype=np.float32)
+        for i in range(n_fu):
+            for j in range(feat_count[i]):
+                thr_table[thr_offsets[i] + j] = cb_table[r.read(cb_ref_bits)]
+    else:
+        feat_width = np.zeros(n_fu, dtype=np.int32)
+        feat_isfloat = np.zeros(n_fu, dtype=bool)
+        for i in range(n_fu):
+            feat_input[i] = r.read(fidx_bits)
+            feat_width[i] = 2 ** r.read(3)
+            feat_isfloat[i] = bool(r.read(1))
+            feat_count[i] = r.read(cnt_bits) + 1
 
-    thr_offsets = np.zeros(n_fu + 1, dtype=np.int32)
-    np.cumsum(feat_count, out=thr_offsets[1:])
-    thr_table = np.zeros(int(thr_offsets[-1]), dtype=np.float32)
-    for i in range(n_fu):
-        for j in range(feat_count[i]):
-            if feat_isfloat[i] and feat_width[i] == 32:
-                v = r.read_f32()
-            elif feat_isfloat[i] and feat_width[i] == 16:
-                v = r.read_f16()
-            else:
-                v = float(r.read(int(feat_width[i])))
-            thr_table[thr_offsets[i] + j] = v
+        thr_offsets = np.zeros(n_fu + 1, dtype=np.int32)
+        np.cumsum(feat_count, out=thr_offsets[1:])
+        thr_table = np.zeros(int(thr_offsets[-1]), dtype=np.float32)
+        for i in range(n_fu):
+            for j in range(feat_count[i]):
+                if feat_isfloat[i] and feat_width[i] == 32:
+                    v = r.read_f32()
+                elif feat_isfloat[i] and feat_width[i] == 16:
+                    v = r.read_f16()
+                else:
+                    v = float(r.read(int(feat_width[i])))
+                thr_table[thr_offsets[i] + j] = v
 
     leaf_values = np.array([r.read_f32() for _ in range(n_leaf)], dtype=np.float32)
 

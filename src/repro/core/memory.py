@@ -104,13 +104,18 @@ def toad_bits_host(forest: Forest) -> int:
     return L.encode(forest).n_bits
 
 
-def stream_sections(forest: Forest) -> dict:
+def stream_sections(forest: Forest, thr_codebook_bits: int = 0) -> dict:
     """Per-component byte breakdown of the ToaD stream (host-side).
 
     The five components of paper Sec. 3.2: metadata, feature & threshold
-    map, global thresholds, global leaf values, trees.  ``total_bytes``
-    equals ``toad_bits_host(forest) / 8`` exactly (tested); the breakdown
-    powers artifact manifests and the fig4 per-stage size report.
+    map, global thresholds, global leaf values, trees — plus
+    ``thr_codebook_bytes``, the shared threshold table of the codebook
+    stream layout (0.0 for classic streams; with ``thr_codebook_bits > 0``
+    the breakdown follows the codebook layout and ``thresholds_bytes``
+    counts the per-feature *references* instead of full-width values).
+    ``total_bytes`` equals ``encode(forest, thr_codebook_bits).n_bytes``
+    exactly (tested); the breakdown powers artifact manifests and the fig4
+    per-stage size report.
     """
     K = int(forest.n_trees)
     D = forest.max_depth
@@ -131,21 +136,31 @@ def stream_sections(forest: Forest) -> dict:
     fidx_bits = bits_for(d)
 
     meta = L.metadata_bits(C)
-    fmap = n_fu * (fidx_bits + 3 + 1 + cnt_bits)
-    thr = sum(
-        L.select_width(edges[f, thr_by_feat[f]])[0] * len(thr_by_feat[f])
-        for f in features
-    )
+    total_count = sum(len(v) for v in thr_by_feat.values())
+    if thr_codebook_bits > 0:
+        n_cb = len(L.used_threshold_values(forest))
+        meta += L.META_NCB_BITS
+        fmap = n_fu * (fidx_bits + cnt_bits)
+        cb_table = 32 * n_cb
+        thr = total_count * bits_for(n_cb)
+    else:
+        fmap = n_fu * (fidx_bits + 3 + 1 + cnt_bits)
+        cb_table = 0
+        thr = sum(
+            L.select_width(edges[f, thr_by_feat[f]])[0] * len(thr_by_feat[f])
+            for f in features
+        )
     leaf_table = 32 * n_leaf
     n_splits = int(np.asarray(forest.is_split)[:K].sum())
     trees = K * (I * fu_bits + Lf * leaf_bits) + n_splits * tidx_bits
     return {
         "metadata_bytes": meta / 8.0,
         "feature_map_bytes": fmap / 8.0,
+        "thr_codebook_bytes": cb_table / 8.0,
         "thresholds_bytes": thr / 8.0,
         "leaf_table_bytes": leaf_table / 8.0,
         "trees_bytes": trees / 8.0,
-        "total_bytes": (meta + fmap + thr + leaf_table + trees) / 8.0,
+        "total_bytes": (meta + fmap + cb_table + thr + leaf_table + trees) / 8.0,
     }
 
 

@@ -15,9 +15,12 @@ makes that composition a first-class object instead of a side effect of
   spec reproduces the historical ``encode -> decode -> to_packed`` chain
   byte for byte.
 * :func:`run_pipeline` — execute a spec against a trained forest.
-* :func:`search_budget` — walk a ladder of specs (exact -> fp16 leaves ->
-  k-bit codebook) and return the first artifact that fits a byte budget,
-  the LIMITS-style "compile for the device" workflow.
+* :func:`search_budget` — walk a *budget ladder* of specs (exact -> fp16
+  leaves -> leaf codebooks interleaved with threshold codebooks) and return
+  the first artifact that fits a byte budget, the LIMITS-style "compile for
+  the device" workflow.  An optional accuracy floor (``max_pred_delta``)
+  additionally rejects rungs whose probe-set prediction drift exceeds it,
+  so the search is gated on quality as well as bytes.
 
 Built-in stages:
 
@@ -25,6 +28,12 @@ Built-in stages:
 ``threshold_width``       per-feature threshold width selection
                           (``layout.select_width``); ``threshold_precision=
                           "f16"`` forces lossy fp16 edge rounding
+``threshold_codebook``    k-means clustering of all split thresholds into a
+                          single shared table of <= 2**bits entries
+                          (globally or per feature); nodes reference the
+                          table with bits-wide indices and the stream
+                          switches to the shared-table layout
+                          (``layout.encode(thr_codebook_bits=...)``)
 ``leaf_f16``              fp16-round the global leaf-value table and merge
                           now-identical entries (the paper's "quantized"
                           baseline, leaf half, plus table dedup)
@@ -61,6 +70,7 @@ from repro.core.layout import (
     encode,
     select_width,
     to_packed,
+    used_threshold_values,
 )
 from repro.gbdt.forest import Forest
 
@@ -72,6 +82,12 @@ DEFAULT_STAGES = ("threshold_width", "encode", "pack")
 # --------------------------------------------------------------------------
 
 
+# Spec fields added after the v2 .toad format shipped.  ``to_dict`` omits
+# them at their default values so artifacts that don't use the threshold
+# codebook keep a spec dict that pre-existing runtimes can parse.
+_POST_V2_SPEC_DEFAULTS = {"thr_codebook_bits": 6, "thr_codebook_scope": "global"}
+
+
 @dataclasses.dataclass(frozen=True)
 class CompressionSpec:
     """Declarative description of one compression plan (JSON-serializable)."""
@@ -81,6 +97,8 @@ class CompressionSpec:
     codebook_bits: int = 4
     codebook_iters: int = 8
     name: str = "exact"
+    thr_codebook_bits: int = 6
+    thr_codebook_scope: str = "global"  # global | per_feature
 
     # ------------------------------------------------------------- builders
     @classmethod
@@ -104,10 +122,45 @@ class CompressionSpec:
             name=f"codebook-{bits}bit",
         )
 
+    @classmethod
+    def thr_codebook(
+        cls, bits: int = 6, scope: str = "global", iters: int = 8
+    ) -> "CompressionSpec":
+        """Shared threshold table only; the leaf table stays exact."""
+        suffix = "" if scope == "global" else "-pf"
+        return cls(
+            stages=("threshold_codebook", "encode", "pack"),
+            thr_codebook_bits=bits,
+            thr_codebook_scope=scope,
+            codebook_iters=iters,
+            name=f"thr-codebook-{bits}bit{suffix}",
+        )
+
+    @classmethod
+    def codebook_full(
+        cls,
+        thr_bits: int = 6,
+        leaf_bits: int = 4,
+        scope: str = "global",
+        iters: int = 8,
+    ) -> "CompressionSpec":
+        """Both shared tables codebook-quantized (LIMITS-style layout)."""
+        return cls(
+            stages=("threshold_codebook", "leaf_codebook", "encode", "pack"),
+            thr_codebook_bits=thr_bits,
+            thr_codebook_scope=scope,
+            codebook_bits=leaf_bits,
+            codebook_iters=iters,
+            name=f"codebook-t{thr_bits}l{leaf_bits}",
+        )
+
     # ----------------------------------------------------------------- json
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["stages"] = list(d["stages"])
+        for k, default in _POST_V2_SPEC_DEFAULTS.items():
+            if d[k] == default:
+                del d[k]
         return d
 
     def to_json(self) -> str:
@@ -161,6 +214,7 @@ class CompressionReport:
     budget_bytes: float | None = None
     fits: bool | None = None
     ladder: list[dict] = dataclasses.field(default_factory=list)
+    max_pred_delta: float | None = None  # accuracy floor the search ran under
 
     @property
     def ratio(self) -> float:
@@ -177,6 +231,7 @@ class CompressionReport:
             "budget_bytes": self.budget_bytes,
             "fits": self.fits,
             "ladder": list(self.ladder),
+            "max_pred_delta": self.max_pred_delta,
         }
 
     def summary(self) -> str:
@@ -191,14 +246,19 @@ class CompressionReport:
                 f"   max|Δpred| {s.max_abs_pred_delta:.2e}"
             )
         if self.budget_bytes is not None:
+            floor = (
+                "" if self.max_pred_delta is None
+                else f", max|Δpred| <= {self.max_pred_delta:g}"
+            )
             lines.append(
-                f"  budget {self.budget_bytes:.0f} B: "
+                f"  budget {self.budget_bytes:.0f} B{floor}: "
                 + ("fits" if self.fits else "DOES NOT FIT")
             )
             for rung in self.ladder:
+                note = "" if rung.get("accuracy_ok", True) else "  (over floor)"
                 lines.append(
                     f"    tried {rung['spec']:16s} {rung['n_bytes']:8.0f} B"
-                    f" {'<=' if rung['fits'] else '>'} budget"
+                    f" {'<=' if rung['fits'] else '>'} budget{note}"
                 )
         return "\n".join(lines)
 
@@ -250,8 +310,12 @@ class PipelineContext:
         self.encoded: EncodedModel | None = None
         self.decoded: DecodedModel | None = None
         self.packed: PackedEnsemble | None = None
+        # set by the threshold_codebook stage; encode() then emits the
+        # shared-table stream layout instead of per-feature widths
+        self.thr_codebook_bits = 0
         self._probe = probe
         self._sb_forest = None
+        self._sb_cb = 0
         self._sb_encoded: EncodedModel | None = None
 
     @property
@@ -261,10 +325,14 @@ class PipelineContext:
         return self._probe
 
     def stream(self) -> EncodedModel:
-        """Encoded stream of the *current* forest (memoized per forest)."""
-        if self._sb_forest is not self.forest:
-            self._sb_encoded = encode(self.forest)
+        """Encoded stream of the *current* forest and stream layout
+        (memoized per (forest, thr_codebook_bits))."""
+        if self._sb_forest is not self.forest or self._sb_cb != self.thr_codebook_bits:
+            self._sb_encoded = encode(
+                self.forest, thr_codebook_bits=self.thr_codebook_bits
+            )
             self._sb_forest = self.forest
+            self._sb_cb = self.thr_codebook_bits
         return self._sb_encoded
 
     def stream_bytes(self) -> float:
@@ -375,6 +443,78 @@ def fp16_leaf_table(forest: Forest) -> Forest:
     return _rebuild_leaf_table(forest, rounded)
 
 
+def codebook_thresholds(
+    forest: Forest, bits: int = 6, iters: int = 8, scope: str = "global"
+) -> Forest:
+    """Cluster split thresholds into a shared table of ``<= 2**bits`` values.
+
+    With ``scope="global"`` one k-means codebook covers every used feature
+    (maximum sharing — the LIMITS-style single table); ``"per_feature"``
+    clusters each feature's thresholds separately (each feature keeps
+    ``<= 2**bits`` distinct values, better for wildly different scales, but
+    the union table may exceed ``2**bits`` entries).
+
+    The transform (a) snaps each used feature's *entire* edge row through
+    the monotone nearest-centroid map, so rows stay sorted and the binned
+    test ``bin <= e  <=>  x <= edges[e]`` keeps holding, and (b) remaps
+    every split's ``thr_bin`` to the first edge slot holding its snapped
+    value, so edges that collapsed to the same centroid share one id (that
+    dedup is what shrinks the encoded stream).  A feature whose distinct
+    used values already fit the table is snapped to itself (identity).
+    Lossy: splits move to centroid thresholds.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.codebook import quantize
+
+    if scope not in ("global", "per_feature"):
+        raise ValueError(f"thr_codebook_scope must be global|per_feature, got {scope!r}")
+    if not 2 <= bits <= 16:
+        raise ValueError(f"thr_codebook_bits must be in [2, 16], got {bits}")
+    features, thr_by_feat = _used_sets(forest)
+    if not features:
+        return forest
+
+    edges = np.asarray(forest.edges, dtype=np.float32).copy()
+
+    def centroids(vals: np.ndarray) -> np.ndarray:
+        vals = np.unique(vals.astype(np.float32))
+        if len(vals) <= 2**bits:
+            return vals  # already fits: identity snap
+        cb, _ = quantize(jnp.asarray(vals), bits=bits, iters=iters)
+        return np.unique(np.asarray(cb, np.float32))
+
+    if scope == "global":
+        shared = centroids(
+            np.concatenate([edges[f, thr_by_feat[f]] for f in features])
+        )
+        tables = {f: shared for f in features}
+    else:
+        tables = {f: centroids(edges[f, thr_by_feat[f]]) for f in features}
+
+    thr_bin = np.asarray(forest.thr_bin).copy()
+    feat_arr = np.asarray(forest.feature)
+    split_arr = np.asarray(forest.is_split)
+    for f in features:
+        cb = tables[f]
+        row = edges[f]
+        finite = np.isfinite(row)
+        if len(cb) == 1:
+            row[finite] = cb[0]
+        else:
+            mids = (cb[1:] + cb[:-1]) / 2.0
+            row[finite] = cb[np.searchsorted(mids, row[finite])]
+        # canonical id per slot: the first slot holding the same value
+        canon = np.searchsorted(row, row, side="left").astype(np.int32)
+        mask = split_arr & (feat_arr == f)
+        safe = np.clip(thr_bin, 0, len(canon) - 1)
+        thr_bin = np.where(mask, canon[safe], thr_bin)
+
+    return dataclasses.replace(
+        forest, edges=jnp.asarray(edges), thr_bin=jnp.asarray(thr_bin)
+    )
+
+
 def codebook_leaf_values(forest: Forest, bits: int = 4, iters: int = 8) -> Forest:
     """k-means codebook quantization of the shared leaf table.
 
@@ -433,6 +573,40 @@ class ThresholdWidthStage(CompressionStage):
             widths[key] = widths.get(key, 0) + 1
         return {"precision": mode, "n_used_features": len(features),
                 "width_histogram": widths}
+
+
+@register_stage
+class ThresholdCodebookStage(CompressionStage):
+    """Shared threshold codebook: one table, bits-wide refs (LIMITS-style).
+
+    Besides transforming the forest (``codebook_thresholds``), the stage
+    flips the pipeline's stream layout to the shared-table variant, so the
+    subsequent ``encode`` emits the codebook sections and every byte figure
+    downstream (reports, budget rungs, manifests) reflects the new layout.
+    """
+
+    name = "threshold_codebook"
+
+    def is_lossless(self, spec: CompressionSpec) -> bool:
+        return False
+
+    def apply(self, ctx: PipelineContext) -> dict:
+        before = len(used_threshold_values(ctx.forest))
+        ctx.forest = codebook_thresholds(
+            ctx.forest,
+            bits=ctx.spec.thr_codebook_bits,
+            iters=ctx.spec.codebook_iters,
+            scope=ctx.spec.thr_codebook_scope,
+        )
+        ctx.thr_codebook_bits = ctx.spec.thr_codebook_bits
+        after = len(used_threshold_values(ctx.forest))
+        return {
+            "bits": ctx.spec.thr_codebook_bits,
+            "scope": ctx.spec.thr_codebook_scope,
+            "n_thresholds_before": before,
+            "n_thresholds_after": after,
+            "thr_ref_bits": bits_for(max(after, 1)),
+        }
 
 
 @register_stage
@@ -545,6 +719,7 @@ def run_pipeline(
     ctx = PipelineContext(forest, spec, probe=probe)
     if base_encoded is not None:
         ctx._sb_forest, ctx._sb_encoded = forest, base_encoded
+        ctx._sb_cb = base_encoded.thr_codebook_bits
     bytes_initial = ctx.stream_bytes()
     preds_exact = None
 
@@ -552,6 +727,7 @@ def run_pipeline(
     cur_bytes = bytes_initial
     for stage in stages:
         before_forest = ctx.forest
+        before_cb = ctx.thr_codebook_bits
         lossless = stage.is_lossless(spec)
         preds_before = None
         if not lossless:
@@ -561,12 +737,15 @@ def run_pipeline(
                 preds_exact if before_forest is forest else _predict(before_forest, ctx.probe)
             )
         info = stage.apply(ctx)
+        changed = (
+            ctx.forest is not before_forest or ctx.thr_codebook_bits != before_cb
+        )
         if stage.name == "encode":
             after_bytes = ctx.encoded.n_bytes
         elif stage.name == "pack":
             after_bytes = packed_nbytes(ctx.packed)
         else:
-            after_bytes = ctx.stream_bytes() if ctx.forest is not before_forest else cur_bytes
+            after_bytes = ctx.stream_bytes() if changed else cur_bytes
         delta = 0.0
         if preds_before is not None and ctx.forest is not before_forest:
             delta = float(np.abs(_predict(ctx.forest, ctx.probe) - preds_before).max())
@@ -611,14 +790,24 @@ def run_pipeline(
 
 
 def default_ladder() -> tuple[CompressionSpec, ...]:
-    """Ordered plans from exact to most aggressive (LIMITS-style ladder)."""
+    """Ordered plans from exact to most aggressive (LIMITS-style ladder).
+
+    Threshold-codebook rungs are interleaved with the leaf-only rungs: at
+    every leaf bit-width the next-more-aggressive plan also shares the
+    threshold table, so trained-in reuse (penalties) and both post-hoc
+    codebooks compose inside one budget search.
+    """
     return (
         CompressionSpec.exact(),
         CompressionSpec.fp16_leaves(),
         CompressionSpec.codebook(6),
+        CompressionSpec.codebook_full(6, 6),
         CompressionSpec.codebook(4),
+        CompressionSpec.codebook_full(5, 4),
         CompressionSpec.codebook(3),
+        CompressionSpec.codebook_full(4, 3),
         CompressionSpec.codebook(2),
+        CompressionSpec.codebook_full(3, 2),
     )
 
 
@@ -627,14 +816,18 @@ def search_budget(
     budget_bytes: float,
     ladder: tuple[CompressionSpec, ...] | None = None,
     probe=None,
+    max_pred_delta: float | None = None,
 ) -> PipelineResult:
     """Return the first ladder plan whose encoded stream fits the budget.
 
+    ``max_pred_delta`` adds an accuracy floor: a rung whose probe-set
+    prediction drift exceeds it is rejected even when its bytes fit, so the
+    search optimizes under *two* gates (size and quality), not size alone.
     The winning result's report carries the full ladder trace (every tried
-    spec with its size), so the trade is auditable.  Raises ``ValueError``
-    when even the last rung does not fit, or when a (custom) ladder rung
-    lacks the ``encode`` stage — a rung without it has no stream to
-    measure against the budget.
+    spec with its size, drift, and per-gate verdicts), so the trade is
+    auditable.  Raises ``ValueError`` when no rung passes both gates, or
+    when a (custom) ladder rung lacks the ``encode`` stage — a rung without
+    it has no stream to measure against the budget.
     """
     ladder = ladder or default_ladder()
     for spec in ladder:
@@ -652,21 +845,34 @@ def search_budget(
         res = run_pipeline(forest, spec, probe=probe, base_encoded=base_encoded)
         nb = res.encoded.n_bytes
         fits = nb <= budget_bytes
+        delta = res.report.max_abs_pred_delta
+        accuracy_ok = max_pred_delta is None or delta <= max_pred_delta
         tried.append(
             {
                 "spec": spec.name,
                 "n_bytes": nb,
                 "fits": fits,
-                "max_abs_pred_delta": res.report.max_abs_pred_delta,
+                "max_abs_pred_delta": delta,
+                "accuracy_ok": accuracy_ok,
             }
         )
-        if fits:
+        if fits and accuracy_ok:
             res.report.budget_bytes = float(budget_bytes)
             res.report.fits = True
             res.report.ladder = tried
+            res.report.max_pred_delta = max_pred_delta
             return res
-    sizes = ", ".join(f"{t['spec']}={t['n_bytes']:.0f}B" for t in tried)
+    sizes = ", ".join(
+        f"{t['spec']}={t['n_bytes']:.0f}B"
+        + ("" if t["accuracy_ok"] else f" (Δpred {t['max_abs_pred_delta']:.1e} over floor)")
+        for t in tried
+    )
+    floor = (
+        "" if max_pred_delta is None
+        else f" under accuracy floor max_pred_delta={max_pred_delta:g}"
+    )
     raise ValueError(
-        f"no compression plan fits budget_bytes={budget_bytes:.0f}: {sizes}. "
-        f"Train a smaller model (toad_forestsize) or pass a custom ladder."
+        f"no compression plan fits budget_bytes={budget_bytes:.0f}{floor}: "
+        f"{sizes}. Train a smaller model (toad_forestsize), relax the floor, "
+        f"or pass a custom ladder."
     )

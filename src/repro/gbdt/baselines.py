@@ -40,6 +40,23 @@ def quantize_forest(forest: Forest) -> Forest:
     return fp16_leaf_values(fp16_edges(forest))
 
 
+def shared_table_forest(forest: Forest, bits: int = 6, iters: int = 8) -> Forest:
+    """LIMITS-style fully-shared-table baseline: one threshold codebook +
+    one leaf codebook, both ``<= 2**bits`` entries.
+
+    Like :func:`quantize_forest`, this is composed from the pipeline's own
+    transforms — the same code the ``threshold_codebook`` + ``leaf_codebook``
+    stages execute (equivalence tested in tests/test_thr_codebook.py), so a
+    forest-level baseline cannot drift from the deployed pipeline path.  The
+    fig6/fig7 spec sweeps run the equivalent ``CompressionSpec.codebook_full``
+    plan through the pipeline itself.
+    """
+    from repro.core.pipeline import codebook_leaf_values, codebook_thresholds
+
+    shared_thr = codebook_thresholds(forest, bits=bits, iters=iters)
+    return codebook_leaf_values(shared_thr, bits=bits, iters=iters)
+
+
 # --------------------------------------------------------------------------
 # CEGB
 # --------------------------------------------------------------------------

@@ -15,6 +15,12 @@
     PYTHONPATH=src python -m repro.launch.serve --arch toad-gbdt \
         --model model.toad --smoke
 
+``--model`` is the deployment path: artifacts are produced offline (e.g.
+``examples/train_toad.py --compress-budget B --export-artifact m.toad``,
+which walks the budget ladder — exact -> fp16 leaves -> leaf/threshold
+codebooks — and keeps the first plan that fits B), fingerprint-verified at
+load, and served through any predictor backend without retraining.
+
 On production meshes the LM functions lower against the sequence-sharded
 cache (see launch/dryrun.py decode cells); here the reduced configs run the
 actual loops on CPU to prove both serving paths end to end.

@@ -1,0 +1,321 @@
+"""The shared threshold-codebook stage: transform invariants, the
+codebook stream layout, backend/artifact parity, bits edge cases, the
+accuracy-floor budget ladder, and legacy-manifest compatibility."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import CompressionSpec, ToadModel
+from repro.core import (
+    decode,
+    encode,
+    list_stages,
+    run_pipeline,
+    search_budget,
+    stream_sections,
+    used_threshold_values,
+)
+from repro.core.pipeline import codebook_thresholds
+from repro.gbdt.baselines import shared_table_forest
+
+
+def _fit(rng, task="binary", n_classes=0, n_features=6, **over):
+    n = 400
+    X = rng.normal(size=(n, n_features)).astype(np.float32)
+    if task == "regression":
+        y = X[:, 0] * 2 + np.sin(X[:, min(1, n_features - 1)])
+    elif task == "binary":
+        y = (X[:, 0] + X[:, min(1, n_features - 1)] ** 2 > 0.7).astype(np.float32)
+    else:
+        y = np.digitize(X[:, 0], [-0.5, 0.5]).astype(np.float32)
+    kw = dict(n_rounds=10, max_depth=3, learning_rate=0.3,
+              toad_penalty_feature=1.0, toad_penalty_threshold=0.5)
+    kw.update(over)
+    n_bins = kw.pop("n_bins", 32)
+    model = ToadModel(task=task, n_classes=n_classes, n_bins=n_bins, **kw)
+    return model.fit(X, y.astype(np.float32)), X
+
+
+def _backends():
+    b = ["reference", "packed"]
+    if jax.default_backend() == "tpu":
+        b.append("pallas")
+    return b
+
+
+# ------------------------------------------------------------- the transform
+def test_stage_registered():
+    assert "threshold_codebook" in list_stages()
+
+
+@pytest.mark.parametrize("scope", ["global", "per_feature"])
+def test_transform_invariants(rng, scope):
+    """Edges stay sorted per feature, distinct used values shrink to the
+    table size, and every remapped thr_bin still points at its snapped
+    value (the dedup is value-exact)."""
+    model, _ = _fit(rng, n_rounds=16)
+    f = model.forest
+    bits = 3
+    f2 = codebook_thresholds(f, bits=bits, scope=scope)
+
+    edges = np.asarray(f2.edges)
+    for row in edges:
+        fin = row[np.isfinite(row)]
+        assert np.all(np.diff(fin) >= 0), "edge row lost sortedness"
+
+    vals = used_threshold_values(f2)
+    if scope == "global":
+        assert len(vals) <= 2**bits < len(used_threshold_values(f))
+    # per-feature: each used feature individually fits the table
+    from repro.core.layout import _used_sets
+
+    feats, thr_by_feat = _used_sets(f2)
+    for ff in feats:
+        assert len(np.unique(edges[ff, thr_by_feat[ff]])) <= 2**bits
+
+
+def test_transform_identity_when_table_fits(rng):
+    """bits large enough to hold every distinct threshold -> predictions are
+    bit-identical (the snap is the identity map)."""
+    import jax.numpy as jnp
+
+    from repro.gbdt.forest import predict_raw
+
+    model, X = _fit(rng)
+    n_distinct = len(used_threshold_values(model.forest))
+    bits = max(2, int(np.ceil(np.log2(max(n_distinct, 2)))) + 1)
+    f2 = codebook_thresholds(model.forest, bits=bits)
+    np.testing.assert_array_equal(
+        np.asarray(predict_raw(model.forest, jnp.asarray(X))),
+        np.asarray(predict_raw(f2, jnp.asarray(X))),
+    )
+
+
+def test_transform_validates_params(rng):
+    model, _ = _fit(rng)
+    with pytest.raises(ValueError, match="thr_codebook_bits"):
+        codebook_thresholds(model.forest, bits=1)
+    with pytest.raises(ValueError, match="thr_codebook_scope"):
+        codebook_thresholds(model.forest, scope="galaxy")
+
+
+# ----------------------------------------------------- stream layout + sizes
+def test_codebook_stream_roundtrip_and_sections(rng):
+    """decode(encode(f, cb)) reproduces the forest's predictions exactly and
+    the closed-form section breakdown matches the encoder bit for bit."""
+    model, X = _fit(rng, n_rounds=16)
+    f2 = codebook_thresholds(model.forest, bits=4)
+    enc = encode(f2, thr_codebook_bits=4)
+    assert enc.thr_codebook_bits == 4
+    dec = decode(enc)
+
+    import jax.numpy as jnp
+
+    from repro.gbdt.forest import predict_raw
+
+    ref = np.asarray(predict_raw(f2, jnp.asarray(X)))
+    np.testing.assert_allclose(dec.predict(X), ref, rtol=1e-5, atol=1e-5)
+
+    sec = stream_sections(f2, thr_codebook_bits=4)
+    assert sec["total_bytes"] == pytest.approx(enc.n_bytes)
+    assert sec["thr_codebook_bytes"] == 32 * len(used_threshold_values(f2)) / 8.0
+    parts = [v for k, v in sec.items() if k != "total_bytes"]
+    assert sum(parts) == pytest.approx(sec["total_bytes"])
+    # classic accounting is untouched and reports a zero codebook section
+    assert stream_sections(f2)["thr_codebook_bytes"] == 0.0
+
+
+def test_codebook_stream_shrinks_for_threshold_heavy_model(rng):
+    """With many distinct f32 thresholds, the shared table + small refs beat
+    per-feature full-width values."""
+    model, _ = _fit(rng, n_rounds=48, n_bins=64, toad_penalty_feature=0.0,
+                    toad_penalty_threshold=0.0)
+    f = model.forest
+    assert len(used_threshold_values(f)) > 2**4
+    f2 = codebook_thresholds(f, bits=4)
+    assert encode(f2, thr_codebook_bits=4).n_bytes < encode(f).n_bytes
+
+
+def test_zero_split_forest_codebook_layout(rng):
+    """A forest with no splits encodes/decodes in the codebook layout too
+    (empty table, no refs)."""
+    model, X = _fit(rng, min_child_samples=10**6)  # nothing can split
+    f = model.forest
+    assert len(used_threshold_values(f)) == 0
+    enc = encode(f, thr_codebook_bits=6)
+    dec = decode(enc)
+    import jax.numpy as jnp
+
+    from repro.gbdt.forest import predict_raw
+
+    np.testing.assert_allclose(
+        dec.predict(X), np.asarray(predict_raw(f, jnp.asarray(X))),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+# ------------------------------------------------------ pipeline + backends
+@pytest.mark.parametrize("task,n_classes", [("binary", 0), ("multiclass", 3)])
+@pytest.mark.parametrize("spec_fn", [
+    lambda: CompressionSpec.thr_codebook(6),
+    lambda: CompressionSpec.codebook_full(6, 4),
+])
+def test_backend_parity_and_artifact_roundtrip(rng, tmp_path, task, n_classes,
+                                               spec_fn):
+    """compress -> every backend agrees <= 1e-5 on the deployed model; the
+    .toad artifact round-trips stream, spec, and manifest."""
+    model, X = _fit(rng, task=task, n_classes=n_classes)
+    model.compress(spec=spec_fn())
+    outs = {b: model.predict(X, backend=b) for b in _backends()}
+    for b, out in outs.items():
+        np.testing.assert_allclose(out, outs["reference"], rtol=1e-5,
+                                   atol=1e-5, err_msg=b)
+
+    path = model.save(str(tmp_path / "m.toad"))
+    restored = ToadModel.load(path)
+    assert restored.spec == model.spec
+    assert restored.encoded.thr_codebook_bits == model.spec.thr_codebook_bits
+    np.testing.assert_array_equal(restored.encoded.data, model.encoded.data)
+    for b in _backends():
+        np.testing.assert_allclose(restored.predict(X, backend=b),
+                                   outs["reference"], rtol=1e-5, atol=1e-5,
+                                   err_msg=b)
+    manifest = restored.artifact_meta["manifest"]
+    assert manifest["thr_codebook_bits"] == model.spec.thr_codebook_bits
+    assert manifest["sections"]["thr_codebook_bytes"] > 0
+    assert manifest["sections"]["total_bytes"] == pytest.approx(
+        model.encoded.n_bytes
+    )
+
+
+def test_single_feature_model(rng):
+    """d=1: one feature owns every threshold; global and per-feature scope
+    coincide and the whole lifecycle still works."""
+    model, X = _fit(rng, task="regression", n_features=1, n_rounds=6)
+    model.compress(spec=CompressionSpec.thr_codebook(2))
+    assert len(used_threshold_values(model.forest)) <= 4
+    np.testing.assert_allclose(
+        model.predict(X, backend="packed"),
+        model.predict(X, backend="reference"),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_table_smaller_than_distinct_thresholds(rng):
+    """bits=2 forces real clustering (4 centroids for dozens of distinct
+    thresholds): still serves, still round-trips, drift is reported."""
+    model, X = _fit(rng, n_rounds=32, n_bins=64)
+    before = len(used_threshold_values(model.forest))
+    assert before > 4
+    model.compress(spec=CompressionSpec.thr_codebook(2))
+    assert len(used_threshold_values(model.forest)) <= 4
+    stage = {s.stage: s for s in model.compression_report.stages}
+    info = stage["threshold_codebook"].info
+    assert info["n_thresholds_before"] == before
+    assert info["n_thresholds_after"] <= 4
+    assert model.compression_report.max_abs_pred_delta > 0.0
+    np.testing.assert_allclose(
+        model.predict(X, backend="packed"),
+        model.predict(X, backend="reference"),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_shared_table_baseline_matches_pipeline(rng):
+    """The LIMITS-style baseline is exactly the two pipeline transforms."""
+    from repro.core.pipeline import codebook_leaf_values
+
+    model, _ = _fit(rng)
+    b = shared_table_forest(model.forest, bits=4)
+    ref = codebook_leaf_values(codebook_thresholds(model.forest, bits=4), bits=4)
+    np.testing.assert_array_equal(np.asarray(b.edges), np.asarray(ref.edges))
+    np.testing.assert_array_equal(np.asarray(b.thr_bin), np.asarray(ref.thr_bin))
+    np.testing.assert_array_equal(
+        np.asarray(b.leaf_values), np.asarray(ref.leaf_values)
+    )
+
+
+# ------------------------------------------------------- spec serialization
+def test_spec_json_roundtrip_and_v2_compat():
+    spec = CompressionSpec.codebook_full(5, 3, scope="per_feature")
+    assert CompressionSpec.from_json(spec.to_json()) == spec
+    # specs that don't use the codebook serialize without the new keys, so
+    # v2-era runtimes can still parse them ...
+    d = CompressionSpec.exact().to_dict()
+    assert "thr_codebook_bits" not in d and "thr_codebook_scope" not in d
+    # ... and v2-era dicts (no new keys) load with the defaults
+    old = json.loads(json.dumps(d))
+    restored = CompressionSpec.from_dict(old)
+    assert restored == CompressionSpec.exact()
+
+
+# ------------------------------------------------------- budget ladder gate
+def test_ladder_interleaves_threshold_rungs():
+    from repro.core import default_ladder
+
+    names = [s.name for s in default_ladder()]
+    assert "codebook-t6l6" in names and "codebook-6bit" in names
+    assert names.index("codebook-6bit") < names.index("codebook-t6l6") \
+        < names.index("codebook-4bit")
+
+
+def test_accuracy_floor_rejects_lossy_rungs(rng):
+    """floor = 0 admits only lossless rungs: a budget below the exact stream
+    then has no admissible plan and the error names the floor."""
+    model, _ = _fit(rng, n_rounds=16)
+    exact_bytes = encode(model.forest).n_bytes
+    with pytest.raises(ValueError, match="accuracy floor"):
+        search_budget(model.forest, exact_bytes * 0.7, max_pred_delta=0.0)
+    # the same budget without a floor finds a lossy plan
+    res = search_budget(model.forest, exact_bytes * 0.7)
+    assert res.encoded.n_bytes <= exact_bytes * 0.7
+
+
+def test_accuracy_floor_trace_and_selection(rng):
+    """A permissive floor changes nothing; the trace records both gates."""
+    model, _ = _fit(rng, n_rounds=16)
+    exact_bytes = encode(model.forest).n_bytes
+    model.compress(budget_bytes=exact_bytes * 0.7, max_pred_delta=1e9)
+    rep = model.compression_report
+    assert rep.fits is True and rep.max_pred_delta == 1e9
+    assert all("accuracy_ok" in rung for rung in rep.ladder)
+    assert rep.ladder[-1]["accuracy_ok"]
+    assert rep.max_abs_pred_delta <= 1e9
+    # floor without a budget is rejected at the facade
+    with pytest.raises(ValueError, match="budget_bytes"):
+        model.compress(max_pred_delta=0.1)
+
+
+def test_accuracy_floor_skips_fitting_but_inaccurate_rung(rng):
+    """A rung can fit the bytes yet violate the floor: with a generous
+    budget and floor=0, the search must return 'exact' (lossless), never a
+    smaller lossy rung."""
+    model, _ = _fit(rng, n_rounds=16)
+    res = search_budget(model.forest, 10**9, max_pred_delta=0.0)
+    assert res.report.spec.name == "exact"
+    assert res.report.ladder[0]["accuracy_ok"]
+
+
+# ------------------------------------------------------ format negotiation
+def test_exact_artifacts_stay_version_2(rng, tmp_path):
+    """Bundles that don't use the codebook stream keep format_version 2, so
+    pre-codebook runtimes still load them; codebook bundles get 3."""
+    model, _ = _fit(rng)
+    model.compress()
+    p2 = model.save(str(tmp_path / "exact.toad"))
+    with np.load(p2) as z:
+        meta2 = json.loads(bytes(z["meta_json"].tobytes()).decode())
+        assert meta2["format_version"] == 2
+        assert "toad_stream_cb_bits" not in z.files
+
+    model.compress(spec=CompressionSpec.thr_codebook(6))
+    p3 = model.save(str(tmp_path / "cb.toad"))
+    with np.load(p3) as z:
+        meta3 = json.loads(bytes(z["meta_json"].tobytes()).decode())
+        assert meta3["format_version"] == 3
+        assert int(z["toad_stream_cb_bits"]) == 6
+    # and the v3 bundle loads back (fingerprint verified)
+    assert ToadModel.load(p3).encoded.thr_codebook_bits == 6

@@ -1,0 +1,136 @@
+"""Documentation checker: links resolve, code references import, snippets run.
+
+Three passes over README.md, docs/*.md, and src/repro/api/README.md:
+
+1. **Links** — every relative markdown link ``[text](path)`` must point at an
+   existing file (http/mailto/pure-anchor links are skipped; ``#anchors`` on
+   relative paths are stripped before the existence check).
+2. **Code references** — every backticked dotted ``repro.*`` name must
+   import (modules) or resolve as an attribute of its parent module
+   (functions/classes/constants), so the prose cannot drift away from the
+   API the way "compress() pre-spec" docs once did.
+3. **Snippets** — every fenced ```` ```python ```` block is executed, in
+   order, in one namespace per file (so quickstart snippets can build on
+   each other), with the repo root as cwd.  Documentation code is
+   executable, not decorative.  A block can opt out by an immediately
+   preceding ``<!-- docs: skip -->`` line (e.g. requires a TPU).
+
+Exit status is non-zero with a per-failure listing.  CI runs this as the
+``docs`` job:
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import importlib
+import os
+import re
+import sys
+import traceback
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+DOC_FILES = ["README.md", "src/repro/api/README.md"] + sorted(
+    os.path.join("docs", f)
+    for f in (os.listdir(os.path.join(ROOT, "docs")) if os.path.isdir(os.path.join(ROOT, "docs")) else [])
+    if f.endswith(".md")
+)
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+MODREF_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+SKIP_MARK = "<!-- docs: skip -->"
+
+
+def check_links(path: str, text: str) -> list[str]:
+    errors = []
+    base = os.path.dirname(os.path.join(ROOT, path))
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, rel))):
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def check_modrefs(path: str, text: str) -> list[str]:
+    errors = []
+    for name in sorted(set(MODREF_RE.findall(text))):
+        try:
+            importlib.import_module(name)
+            continue
+        except ImportError:
+            pass
+        mod, _, attr = name.rpartition(".")
+        try:
+            if not hasattr(importlib.import_module(mod), attr):
+                errors.append(f"{path}: `{name}` is not an attribute of {mod}")
+        except ImportError as e:
+            errors.append(f"{path}: `{name}` does not import ({e})")
+    return errors
+
+
+def python_blocks(text: str):
+    """Yield (start_line, source, skipped) for every ```python fence."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m and m.group(1) == "python":
+            skipped = any(
+                SKIP_MARK in lines[j]
+                for j in range(max(0, i - 2), i)
+            )
+            body, start = [], i + 1
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield start + 1, "\n".join(body), skipped
+        i += 1
+
+
+def run_snippets(path: str, text: str) -> list[str]:
+    errors = []
+    namespace: dict = {"__name__": f"docs_snippet[{path}]"}
+    for line, src, skipped in python_blocks(text):
+        if skipped:
+            continue
+        try:
+            exec(compile(src, f"{path}:{line}", "exec"), namespace)
+        except Exception:
+            tb = traceback.format_exc(limit=3)
+            errors.append(f"{path}:{line}: snippet failed\n{tb}")
+    return errors
+
+
+def main() -> int:
+    os.chdir(ROOT)
+    failures = []
+    for path in DOC_FILES:
+        full = os.path.join(ROOT, path)
+        if not os.path.exists(full):
+            failures.append(f"{path}: documented file is missing")
+            continue
+        with open(full, encoding="utf-8") as f:
+            text = f.read()
+        failures += check_links(path, text)
+        failures += check_modrefs(path, text)
+        failures += run_snippets(path, text)
+        print(f"checked {path}")
+    if failures:
+        print(f"\n{len(failures)} documentation failure(s):")
+        for f in failures:
+            print(" -", f)
+        return 1
+    print(f"\nall {len(DOC_FILES)} documentation files pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
