@@ -1,0 +1,45 @@
+"""toadcheck: static analysis for .toad artifacts and the jax/pallas code.
+
+Two layers, one diagnostic shape (see docs/analysis.md):
+
+* :mod:`repro.analysis.verify` — structural verification of ``.toad``
+  bundles / encoded streams without decoding-to-predict (``TOAD0xx`` /
+  ``TOAD1xx``).  Load-bearing: ``load_artifact(verify=True)`` runs it
+  before decode, ``save_artifact`` after encode.
+* :mod:`repro.analysis.lint` — AST lint enforcing the repo's jax/pallas
+  contracts (``TOAD2xx``), run from ``tools/toadcheck.py`` and CI.
+"""
+
+from repro.analysis.diagnostics import (
+    CATALOG,
+    ERROR,
+    INFO,
+    WARNING,
+    Baseline,
+    Diagnostic,
+    errors,
+    format_diagnostics,
+)
+from repro.analysis.lint import lint_paths
+from repro.analysis.verify import (
+    verify_artifact,
+    verify_bundle,
+    verify_model,
+    verify_stream,
+)
+
+__all__ = [
+    "CATALOG",
+    "ERROR",
+    "WARNING",
+    "INFO",
+    "Baseline",
+    "Diagnostic",
+    "errors",
+    "format_diagnostics",
+    "lint_paths",
+    "verify_artifact",
+    "verify_bundle",
+    "verify_model",
+    "verify_stream",
+]

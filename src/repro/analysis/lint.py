@@ -1,0 +1,306 @@
+"""Layer 2 of toadcheck: repo-specific AST lint for the jax/pallas code.
+
+These rules (codes ``TOAD2xx``) encode contracts PRs 1-5 established by
+review convention but nothing enforced mechanically:
+
+* **TOAD201** — fp32 accumulation: histogram/count tensors must never be
+  cast (or allocated) in ``bfloat16``/``float16``.  PR-3's quantized-
+  histogram work fixed exactly this class of bug; sample counts in half
+  precision silently mis-rank splits.
+* **TOAD202** — a Python ``if``/``while`` whose test calls into ``jnp``
+  runs at trace time on a traced value and either raises a
+  ``TracerBoolConversionError`` or, worse, silently bakes one branch into
+  the jitted program.
+* **TOAD203** — ``jnp`` calls inside a Python loop in a *hot path*
+  (``kernels/`` and ``gbdt/trainer.py``) unroll into the traced program;
+  each occurrence must be a deliberate static unroll (baseline it with a
+  justification) or become ``lax.scan``/``fori_loop``.
+* **TOAD204** — every ``pl.pallas_call`` must pass ``interpret=`` (the
+  off-TPU gate), and a jit-wrapped function taking ``interpret`` must list
+  it in ``static_argnames`` — a traced ``interpret`` flag fails at trace
+  time only on TPU, i.e. exactly where CI isn't.
+* **TOAD205** — ``@register_stage`` classes must define ``name`` and
+  ``apply`` in their body, ``@register_backend`` classes ``name`` and
+  ``build``; registered names must be unique.  The registries index by
+  these at import time, so a violation is a latent ``KeyError``/silent
+  override.
+* **TOAD206** — every registered backend name must appear quoted somewhere
+  under ``tests/``: the <=1e-5 parity contract is only real if a test
+  exercises the backend by name.
+
+The lint is syntactic (no type inference): rules are tuned for this
+repository's idiom (``import jax.numpy as jnp``) and intentionally err
+toward reporting; deliberate exceptions are grandfathered in
+``tools/toadcheck_baseline.json`` with a justification each.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from pathlib import Path
+
+from repro.analysis.diagnostics import Diagnostic
+
+#: substrings that mark a tensor as a count/accumulator (TOAD201)
+_ACC_NAMES = ("hist", "count", "cnt", "accum", "grad_sum", "hess_sum")
+#: dtype attribute/string names that violate fp32 accumulation
+_HALF_DTYPES = {"bfloat16", "float16", "bf16", "f16"}
+#: path fragments that mark a file as a hot path for TOAD203
+_HOT_PARTS = (os.sep + "kernels" + os.sep,
+              os.sep + "gbdt" + os.sep + "trainer.py")
+
+
+def _root_name(node: ast.AST) -> str:
+    """Leftmost name of an attribute chain: jnp.lax.foo -> 'jnp'."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _is_jnp_call(call: ast.Call) -> bool:
+    return isinstance(call.func, ast.Attribute) and _root_name(call.func) == "jnp"
+
+
+def _jnp_calls(node: ast.AST):
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and _is_jnp_call(sub):
+            yield sub
+
+
+def _value_name(node: ast.AST) -> str:
+    """Best-effort identifier text for 'is this a count tensor' checks."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Subscript):
+        return _value_name(node.value)
+    return ""
+
+
+def _is_half_dtype(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value in _HALF_DTYPES
+    if isinstance(node, ast.Attribute):
+        return node.attr in _HALF_DTYPES
+    return False
+
+
+def _const_strings(node: ast.AST) -> set[str]:
+    """String constants inside a (possibly nested) literal expression."""
+    return {s.value for s in ast.walk(node)
+            if isinstance(s, ast.Constant) and isinstance(s.value, str)}
+
+
+class _FileLint(ast.NodeVisitor):
+    def __init__(self, path: str, source: str, hot: bool):
+        self.path = path
+        self.lines = source.splitlines()
+        self.hot = hot
+        self.diags: list[Diagnostic] = []
+        # (registry, name) -> (path, line); shared across files by lint_paths
+        self.registered: dict[tuple[str, str], tuple[str, int]] = {}
+
+    def diag(self, code: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        src = self.lines[line - 1] if 0 < line <= len(self.lines) else ""
+        self.diags.append(Diagnostic(code=code, message=message,
+                                     file=self.path, line=line,
+                                     source=src))
+
+    # ---- TOAD201: fp32 accumulation --------------------------------------
+    def _check_half_cast(self, node: ast.Call) -> None:
+        if not (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "astype" and node.args):
+            return
+        name = _value_name(node.func.value).lower()
+        if any(a in name for a in _ACC_NAMES) and _is_half_dtype(node.args[0]):
+            self.diag("TOAD201", node,
+                      f"count/histogram tensor {name!r} cast to a half-"
+                      f"precision dtype; accumulators must stay fp32")
+
+    def _check_half_alloc(self, node: ast.Assign) -> None:
+        targets = [_value_name(t).lower() for t in node.targets]
+        if not any(a in t for t in targets for a in _ACC_NAMES):
+            return
+        for call in ast.walk(node.value):
+            if isinstance(call, ast.Call):
+                for kw in call.keywords:
+                    if kw.arg == "dtype" and _is_half_dtype(kw.value):
+                        self.diag("TOAD201", node,
+                                  f"count/histogram tensor "
+                                  f"{' / '.join(filter(None, targets))!r} "
+                                  f"allocated with a half-precision dtype")
+                        return
+
+    # ---- TOAD202 / TOAD203: trace-unsafe control flow ---------------------
+    def _check_traced_test(self, node: ast.If | ast.While) -> None:
+        if any(True for _ in _jnp_calls(node.test)):
+            kind = "if" if isinstance(node, ast.If) else "while"
+            self.diag("TOAD202", node,
+                      f"Python `{kind}` tests a jnp expression; under jit "
+                      f"this is a trace-time branch on a traced value")
+
+    def _check_loop(self, node: ast.For | ast.While) -> None:
+        if not self.hot:
+            return
+        n = sum(1 for body in node.body for _ in _jnp_calls(body))
+        if n:
+            self.diag("TOAD203", node,
+                      f"Python loop in a hot path wraps {n} jnp call(s); "
+                      f"each trace unrolls it — keep only deliberate "
+                      f"static unrolls")
+
+    # ---- TOAD204: pallas interpret gating ---------------------------------
+    def _check_pallas_call(self, node: ast.Call) -> None:
+        fname = (node.func.attr if isinstance(node.func, ast.Attribute)
+                 else getattr(node.func, "id", ""))
+        if fname != "pallas_call":
+            return
+        kwargs = {kw.arg for kw in node.keywords}
+        if "interpret" not in kwargs and None not in kwargs:  # None = **kw
+            self.diag("TOAD204", node,
+                      "pallas_call without interpret=: the kernel cannot "
+                      "run off-TPU (CI, CPU dev boxes)")
+
+    def _check_jit_static(self, node: ast.FunctionDef) -> None:
+        params = {a.arg for a in node.args.args + node.args.kwonlyargs}
+        if "interpret" not in params:
+            return
+        for dec in node.decorator_list:
+            if not isinstance(dec, ast.Call):
+                continue
+            dec_text = ast.dump(dec)
+            if "jit" not in dec_text:
+                continue
+            static = set()
+            for kw in dec.keywords:
+                if kw.arg in ("static_argnames", "static_argnums"):
+                    static |= _const_strings(kw.value)
+            if "interpret" not in static:
+                self.diag("TOAD204", node,
+                          f"jit-wrapped {node.name}() takes interpret= but "
+                          f"does not list it in static_argnames; tracing "
+                          f"the flag fails on TPU")
+
+    # ---- TOAD205: registry contracts --------------------------------------
+    def _check_registration(self, node: ast.ClassDef) -> None:
+        decs = {d.id for d in node.decorator_list if isinstance(d, ast.Name)}
+        registry = ("stage" if "register_stage" in decs else
+                    "backend" if "register_backend" in decs else None)
+        if registry is None:
+            return
+        required = "apply" if registry == "stage" else "build"
+        methods = {n.name for n in node.body if isinstance(
+            n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        name_val = None
+        for stmt in node.body:
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name) and t.id == "name" and \
+                            isinstance(stmt.value, ast.Constant) and \
+                            isinstance(stmt.value.value, str):
+                        name_val = stmt.value.value
+        if name_val is None:
+            self.diag("TOAD205", node,
+                      f"@register_{registry} class {node.name} defines no "
+                      f"literal `name = \"...\"`; the registry would key it "
+                      f"under the inherited placeholder")
+        if required not in methods:
+            self.diag("TOAD205", node,
+                      f"@register_{registry} class {node.name} does not "
+                      f"define {required}() in its body")
+        if name_val is not None:
+            key = (registry, name_val)
+            if key in self.registered:
+                where = self.registered[key]
+                self.diag("TOAD205", node,
+                          f"{registry} name {name_val!r} already registered "
+                          f"at {where[0]}:{where[1]}; the second "
+                          f"registration silently wins")
+            else:
+                self.registered[key] = (self.path, node.lineno)
+
+    # ---- dispatch ----------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        self._check_half_cast(node)
+        self._check_pallas_call(node)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self._check_half_alloc(node)
+        self.generic_visit(node)
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_traced_test(node)
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_traced_test(node)
+        self._check_loop(node)
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        self._check_loop(node)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._check_jit_static(node)
+        self.generic_visit(node)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._check_registration(node)
+        self.generic_visit(node)
+
+
+def _iter_py_files(paths: list[str]):
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+        else:
+            yield path
+
+
+def lint_paths(paths: list[str],
+               tests_dir: str | None = None) -> list[Diagnostic]:
+    """Run every TOAD2xx rule over ``paths`` (files or directories).
+
+    ``tests_dir`` enables TOAD206: each ``@register_backend`` name found in
+    the linted sources must appear as a quoted string in some test file.
+    """
+    diags: list[Diagnostic] = []
+    registered: dict[tuple[str, str], tuple[str, int]] = {}
+    backends: dict[str, tuple[str, int]] = {}
+    for f in _iter_py_files(paths):
+        try:
+            source = f.read_text(encoding="utf-8")
+            tree = ast.parse(source, filename=str(f))
+        except (OSError, SyntaxError) as e:
+            diags.append(Diagnostic(code="TOAD205", file=str(f),
+                                    message=f"file does not parse: {e}"))
+            continue
+        hot = any(part in str(f) for part in _HOT_PARTS)
+        lint = _FileLint(str(f), source, hot=hot)
+        lint.registered = registered  # shared: dup names across files
+        lint.visit(tree)
+        diags.extend(lint.diags)
+        for (registry, name), where in registered.items():
+            if registry == "backend":
+                backends.setdefault(name, where)
+
+    if tests_dir is not None and Path(tests_dir).is_dir():
+        corpus = "\n".join(
+            t.read_text(encoding="utf-8")
+            for t in sorted(Path(tests_dir).rglob("*.py"))
+        )
+        for name, (path, line) in sorted(backends.items()):
+            if f'"{name}"' not in corpus and f"'{name}'" not in corpus:
+                diags.append(Diagnostic(
+                    code="TOAD206", file=path, line=line,
+                    message=f"backend {name!r} has no parity test: the name "
+                            f"never appears quoted under {tests_dir}",
+                    source=f'name = "{name}"',
+                ))
+    return diags

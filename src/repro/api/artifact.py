@@ -43,6 +43,8 @@ import json
 
 import numpy as np
 
+from repro.analysis.diagnostics import errors, format_diagnostics
+from repro.analysis.verify import verify_bundle
 from repro.core.layout import EncodedModel, decode, to_packed
 from repro.core.memory import compression_summary, stream_sections
 from repro.core.pipeline import CompressionSpec, _predict, probe_inputs
@@ -102,11 +104,14 @@ def build_manifest(model) -> dict:
     return manifest
 
 
-def save_artifact(model, path: str) -> str:
+def save_artifact(model, path: str, verify: bool = True) -> str:
     """Persist a fitted model as a versioned .toad bundle at ``path``.
 
     The path is written verbatim (no extension appended), so ``model.toad``
-    stays ``model.toad``.
+    stays ``model.toad``.  With ``verify=True`` (default) the bundle is
+    structurally verified post-encode (``repro.analysis.verify``) before a
+    byte is written, so an encoder bug fails at the producer instead of on
+    a device.
     """
     from repro.api.model import _FOREST_FIELDS
 
@@ -146,6 +151,13 @@ def save_artifact(model, path: str) -> str:
         arrays["toad_stream_bits"] = np.asarray(model.encoded.n_bits, np.int64)
         if cb_bits > 0:
             arrays["toad_stream_cb_bits"] = np.asarray(cb_bits, np.int64)
+    if verify:
+        bad = errors(verify_bundle(meta, arrays, path=path))
+        if bad:
+            raise ArtifactError(
+                f"{path}: refusing to save a structurally invalid bundle:\n"
+                + format_diagnostics(bad)
+            )
     with open(path, "wb") as f:
         np.savez_compressed(f, **arrays)
     return path
@@ -156,11 +168,14 @@ def load_artifact(path: str, verify: bool = True):
 
     Rejects artifacts with a newer format version than this runtime
     understands; bundles without a version (pre-spec saves) load as legacy
-    version 1.  With ``verify=True`` (default) the encoded stream's sha256
-    is checked *before* the stream is decoded, and the stored probe-set
-    predictions are recomputed from the loaded forest arrays and compared
-    within the recorded tolerance — so both a corrupted stream and
-    corrupted arrays fail loudly instead of serving wrong scores.
+    version 1.  With ``verify=True`` (default) the bundle is *structurally*
+    verified before anything is decoded (``repro.analysis.verify``: stream
+    bounds, codebook/threshold invariants, tree topology, manifest byte
+    accounting, version negotiation, and the encoded stream's sha256), and
+    the stored probe-set predictions are then recomputed from the loaded
+    forest arrays and compared within the recorded tolerance — so a
+    corrupted stream never reaches the decoder and corrupted arrays fail
+    loudly instead of serving wrong scores.
     """
     import jax.numpy as jnp
 
@@ -179,6 +194,16 @@ def load_artifact(path: str, verify: bool = True):
                 f"this runtime (max {TOAD_FORMAT_VERSION}); upgrade the runtime "
                 f"or re-export the artifact"
             )
+        if verify:
+            # structural verification first: a malformed stream or lying
+            # manifest must be rejected before a single bit is decoded
+            bad = errors(verify_bundle(
+                meta, {k: z[k] for k in z.files}, path=path))
+            if bad:
+                raise ArtifactError(
+                    f"{path}: structural verification failed "
+                    f"({len(bad)} error(s)):\n" + format_diagnostics(bad)
+                )
         model = ToadModel(config=GBDTConfig(**meta["config"]), n_bins=meta["n_bins"])
         model.forest = Forest(
             **{f: jnp.asarray(z[f]) for f in _FOREST_FIELDS},
@@ -194,14 +219,6 @@ def load_artifact(path: str, verify: bool = True):
                     if "toad_stream_cb_bits" in z else 0
                 ),
             )
-            if verify and fp and fp.get("stream_sha256"):
-                # check the stream *before* decoding: a flipped bit must not
-                # reach the packed/pallas serving path
-                if stream_digest(model.encoded) != fp["stream_sha256"]:
-                    raise ArtifactError(
-                        f"{path}: encoded-stream digest mismatch — the ToaD "
-                        f"bit stream is corrupted"
-                    )
             model.decoded = decode(model.encoded)
             model.packed = to_packed(model.decoded)
         if version >= 2:

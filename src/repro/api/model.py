@@ -291,16 +291,30 @@ class ToadModel:
         return report
 
     # ------------------------------------------------------------ persistence
-    def save(self, path: str) -> str:
+    def verify(self) -> list:
+        """Structurally verify the fitted model (``repro.analysis.verify``).
+
+        Returns the list of :class:`~repro.analysis.Diagnostic` findings —
+        empty for a well-formed model.  ``save()`` runs the same checks and
+        refuses on any error-severity finding.
+        """
+        from repro.analysis.verify import verify_model
+
+        self._require_fitted()
+        return verify_model(self)
+
+    def save(self, path: str, verify: bool = True) -> str:
         """Persist as a versioned .toad artifact (see ``repro.api.artifact``).
 
         The bundle carries the format version, compression spec, encoded
         stream, manifest and eval fingerprint; the path is written verbatim
-        (``model.toad`` stays ``model.toad``).
+        (``model.toad`` stays ``model.toad``).  With ``verify=True``
+        (default) the bundle is structurally verified post-encode and the
+        save refuses on any error-severity finding.
         """
         from repro.api.artifact import save_artifact
 
-        return save_artifact(self, path)
+        return save_artifact(self, path, verify=verify)
 
     @classmethod
     def load(cls, path: str, verify: bool = True) -> "ToadModel":

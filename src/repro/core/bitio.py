@@ -4,11 +4,32 @@ Pure numpy, MSB-first within the stream.  The writer produces a ``uint8``
 byte array whose length (in bits) is exactly the number of bits written —
 the paper's memory accounting is derived from this stream, so there is no
 hidden padding other than the final partial byte.
+
+Reads are bounds-checked: any field that would extend past the declared
+stream length raises :class:`StreamBoundsError` (diagnostic ``TOAD001`` in
+``repro.analysis.verify``) instead of wrapping or reading the zero padding
+of the final byte as data.  The declared length itself is validated against
+the backing buffer at construction, so a lying ``n_bits`` cannot make the
+reader index past the array.
 """
 
 from __future__ import annotations
 
 import numpy as np
+
+
+class StreamBoundsError(EOFError):
+    """A read would extend past the end of the bit stream.
+
+    Subclasses :class:`EOFError` so pre-existing callers that caught the
+    generic error keep working; the ``repro.analysis`` verifier surfaces it
+    as diagnostic ``TOAD001`` with the offending bit position attached.
+    """
+
+    def __init__(self, message: str, pos: int = -1, width: int = -1):
+        super().__init__(message)
+        self.pos = pos
+        self.width = width
 
 
 class BitWriter:
@@ -49,7 +70,18 @@ class BitReader:
     def __init__(self, data: np.ndarray, n_bits: int | None = None) -> None:
         self._data = np.asarray(data, dtype=np.uint8)
         self._pos = 0
-        self._n_bits = 8 * len(self._data) if n_bits is None else n_bits
+        self._n_bits = 8 * len(self._data) if n_bits is None else int(n_bits)
+        # validate the declared length against the backing buffer up front:
+        # a caller-supplied n_bits larger than the data would otherwise only
+        # fail (with an opaque IndexError) once a read crosses the real end
+        if self._n_bits < 0 or self._n_bits > 8 * len(self._data):
+            raise StreamBoundsError(
+                f"declared stream length {self._n_bits} bits exceeds the "
+                f"{8 * len(self._data)}-bit backing buffer",
+                pos=0,
+                width=self._n_bits,
+            )
+        self._unpacked: np.ndarray | None = None  # lazy np.unpackbits cache
 
     @property
     def pos(self) -> int:
@@ -59,9 +91,19 @@ class BitReader:
     def remaining(self) -> int:
         return self._n_bits - self._pos
 
-    def read(self, width: int) -> int:
+    def _bounds(self, width: int) -> None:
+        if width < 0:
+            raise ValueError("width must be >= 0")
         if width > self.remaining:
-            raise EOFError(f"requested {width} bits, {self.remaining} remain")
+            raise StreamBoundsError(
+                f"requested {width} bits at bit {self._pos}, "
+                f"{self.remaining} remain",
+                pos=self._pos,
+                width=width,
+            )
+
+    def read(self, width: int) -> int:
+        self._bounds(width)
         value = 0
         for _ in range(width):
             byte = self._data[self._pos // 8]
@@ -70,11 +112,36 @@ class BitReader:
             self._pos += 1
         return value
 
+    def read_array(self, width: int, count: int) -> np.ndarray:
+        """Read ``count`` consecutive ``width``-bit fields, vectorized.
+
+        Returns a uint64 array of length ``count``.  Equivalent to ``count``
+        calls to :meth:`read` but unpacks the stream once (cached) and folds
+        each field with one matmul — the bulk reader the structural verifier
+        uses for threshold tables, codebook references, and leaf sections.
+        """
+        if width == 0:
+            return np.zeros(count, np.uint64)
+        self._bounds(width * count)
+        if width > 63:
+            raise ValueError("read_array supports widths up to 63 bits")
+        if self._unpacked is None:
+            self._unpacked = np.unpackbits(self._data)
+        bits = self._unpacked[self._pos : self._pos + width * count]
+        weights = (np.uint64(1) << np.arange(width - 1, -1, -1, dtype=np.uint64))
+        out = bits.reshape(count, width).astype(np.uint64) @ weights
+        self._pos += width * count
+        return out
+
     def read_f32(self) -> float:
         return float(np.uint32(self.read(32)).view(np.float32))
 
     def read_f16(self) -> float:
         return float(np.uint16(self.read(16)).view(np.float16))
+
+    def read_f32_array(self, count: int) -> np.ndarray:
+        """Read ``count`` consecutive f32 values (vectorized)."""
+        return self.read_array(32, count).astype(np.uint32).view(np.float32)
 
 
 def bits_for(n: int) -> int:

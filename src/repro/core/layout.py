@@ -275,6 +275,113 @@ def encode(forest: Forest, thr_codebook_bits: int = 0) -> EncodedModel:
 
 
 # --------------------------------------------------------------------------
+# Section offsets (location reporting for the structural verifier)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamOffsets:
+    """Bit ranges ``[start, end)`` of every stream section, plus the parsed
+    header fields the ranges were derived from.
+
+    Produced by :func:`stream_offsets` from the metadata and feature-map
+    sections alone (no tree walk): threshold/leaf section sizes follow in
+    closed form from the per-feature counts and widths, and the trees
+    section is whatever remains up to ``n_bits``.  ``repro.analysis.verify``
+    anchors every diagnostic to these ranges so a finding reads
+    ``stream:thresholds@bit 1234`` instead of a bare byte offset; the
+    ``tests/test_toadcheck.py`` corruption factory uses them to seed defects
+    into specific sections surgically.
+
+    ``header`` keys: ``C, K, D, d, n_fu, max_t, n_leaf`` always;
+    ``n_cb`` for codebook-layout streams; ``counts`` (per used feature) and,
+    for classic streams, ``widths`` / ``is_float``; plus the derived field
+    widths ``fu_bits, tidx_bits, cnt_bits, leaf_bits, fidx_bits`` (and
+    ``cb_ref_bits`` for codebook streams).
+    """
+
+    header: dict
+    sections: dict[str, tuple[int, int]]
+
+    def section_at(self, bit: int) -> str:
+        """Name of the section containing ``bit`` ('?' when out of range)."""
+        for name, (lo, hi) in self.sections.items():
+            if lo <= bit < hi:
+                return name
+        return "?"
+
+
+def stream_offsets(model: EncodedModel) -> StreamOffsets:
+    """Parse the stream header and derive every section's bit range.
+
+    Reads only metadata + feature map (cheap, O(|F_U|)); raises
+    :class:`~repro.core.bitio.StreamBoundsError` when the stream is too
+    short to hold them.  The trees section is not walked — its range is
+    ``[trees_start, n_bits)`` and the verifier checks that a full walk
+    consumes it exactly.
+    """
+    r = BitReader(model.data, model.n_bits)
+    header: dict = {}
+    meta_start = 0
+    header["C"] = C = r.read(META_C_BITS)
+    header["K"] = r.read(META_K_BITS)
+    header["D"] = r.read(META_DEPTH_BITS)
+    header["d"] = d = r.read(META_D_BITS)
+    header["n_fu"] = n_fu = r.read(META_FU_BITS)
+    header["max_t"] = max_t = r.read(META_MAXT_BITS)
+    header["n_leaf"] = n_leaf = r.read(META_NLEAF_BITS)
+    header["base_score"] = [r.read_f32() for _ in range(C)]
+
+    header["fu_bits"] = bits_for(n_fu + 1)
+    header["tidx_bits"] = bits_for(max_t)
+    cnt_bits = header["cnt_bits"] = bits_for(max_t)
+    header["leaf_bits"] = bits_for(n_leaf)
+    fidx_bits = header["fidx_bits"] = bits_for(d)
+
+    sections: dict[str, tuple[int, int]] = {}
+    if model.thr_codebook_bits > 0:
+        header["n_cb"] = n_cb = r.read(META_NCB_BITS)
+        cb_ref_bits = header["cb_ref_bits"] = bits_for(n_cb)
+        sections["metadata"] = (meta_start, r.pos)
+        fmap_start = r.pos
+        features, counts = [], []
+        for _ in range(n_fu):
+            features.append(r.read(fidx_bits))
+            counts.append(r.read(cnt_bits) + 1)
+        header["features"] = features
+        header["counts"] = counts
+        sections["feature_map"] = (fmap_start, r.pos)
+        cb_start = r.pos
+        cb_end = cb_start + 32 * n_cb
+        sections["thr_codebook"] = (cb_start, cb_end)
+        thr_end = cb_end + sum(counts) * cb_ref_bits
+        sections["thresholds"] = (cb_end, thr_end)
+    else:
+        sections["metadata"] = (meta_start, r.pos)
+        fmap_start = r.pos
+        features, counts, widths, is_float = [], [], [], []
+        for _ in range(n_fu):
+            features.append(r.read(fidx_bits))
+            widths.append(2 ** r.read(3))
+            is_float.append(bool(r.read(1)))
+            counts.append(r.read(cnt_bits) + 1)
+        header["features"] = features
+        header["counts"] = counts
+        header["widths"] = widths
+        header["is_float"] = is_float
+        sections["feature_map"] = (fmap_start, r.pos)
+        thr_start = r.pos
+        thr_end = thr_start + sum(w * c for w, c in zip(widths, counts))
+        sections["thr_codebook"] = (thr_start, thr_start)  # empty for classic
+        sections["thresholds"] = (thr_start, thr_end)
+
+    leaf_end = thr_end + 32 * max(n_leaf, 1)
+    sections["leaf_table"] = (thr_end, leaf_end)
+    sections["trees"] = (leaf_end, model.n_bits)
+    return StreamOffsets(header=header, sections=sections)
+
+
+# --------------------------------------------------------------------------
 # Decode
 # --------------------------------------------------------------------------
 

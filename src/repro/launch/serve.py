@@ -18,8 +18,9 @@
 ``--model`` is the deployment path: artifacts are produced offline (e.g.
 ``examples/train_toad.py --compress-budget B --export-artifact m.toad``,
 which walks the budget ladder — exact -> fp16 leaves -> leaf/threshold
-codebooks — and keeps the first plan that fits B), fingerprint-verified at
-load, and served through any predictor backend without retraining.
+codebooks — and keeps the first plan that fits B), structurally verified
+(toadcheck) and fingerprint-verified at load, and served through any
+predictor backend without retraining.
 
 On production meshes the LM functions lower against the sequence-sharded
 cache (see launch/dryrun.py decode cells); here the reduced configs run the
@@ -123,6 +124,20 @@ def serve_gbdt(args) -> dict:
     n_requests = 256 if args.smoke else args.requests
     rng = np.random.default_rng(0)
     if getattr(args, "model", None):
+        from repro.analysis import errors, format_diagnostics, verify_artifact
+
+        print(f"verifying artifact {args.model} ...")
+        diags = verify_artifact(args.model)
+        bad = errors(diags)
+        if bad:
+            # a serving host never decodes a structurally invalid bundle
+            print(format_diagnostics(bad))
+            raise SystemExit(
+                f"refusing to serve {args.model}: {len(bad)} structural "
+                f"error(s) — see toadcheck output above"
+            )
+        warn = [d for d in diags if d.severity != "error"]
+        print(f"toadcheck: ok ({len(warn)} warning(s))")
         print(f"loading prebuilt artifact {args.model} ...")
         model = ToadModel.load(args.model)
         if not model.is_compressed:

@@ -1,0 +1,468 @@
+"""toadcheck: the structural artifact/stream verifier (TOAD0xx/TOAD1xx),
+the repo-specific jax/pallas lint (TOAD2xx), bounds-checked bit I/O, and the
+load-bearing integration (load/save refusal, CLI exit codes).
+
+The corruption factory seeds six defect classes into real artifacts and
+asserts the exact diagnostic each produces *and* that
+``ToadModel.load(verify=True)`` refuses the bundle."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    Baseline,
+    errors,
+    format_diagnostics,
+    lint_paths,
+    verify_artifact,
+    verify_stream,
+)
+from repro.api import ArtifactError, CompressionSpec, ToadModel
+from repro.api.model import _FOREST_FIELDS
+from repro.core.bitio import BitReader, BitWriter, StreamBoundsError
+from repro.core.layout import EncodedModel, stream_offsets
+
+REPO = Path(__file__).resolve().parent.parent
+
+SPECS = {
+    "exact": CompressionSpec.exact,
+    "fp16-leaves": CompressionSpec.fp16_leaves,
+    "codebook-4bit": lambda: CompressionSpec.codebook(4),
+    "thr-codebook": CompressionSpec.thr_codebook,
+    "codebook-full": CompressionSpec.codebook_full,
+}
+
+
+# ------------------------------------------------------------ artifact farm
+def _fit(task="binary", n_classes=0):
+    rng = np.random.default_rng(0)
+    n, d = 400, 6
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    if task == "binary":
+        y = (X[:, 0] + X[:, 1] ** 2 > 0.7).astype(np.float32)
+    else:
+        y = np.digitize(X[:, 0], [-0.5, 0.5]).astype(np.float32)
+    model = ToadModel(task=task, n_classes=n_classes, n_bins=16,
+                      n_rounds=8, max_depth=3, learning_rate=0.3)
+    return model.fit(X, y)
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    """One artifact per (spec x task) + a legacy v1 bundle, built once."""
+    root = tmp_path_factory.mktemp("toadcheck")
+    paths = {}
+    models = {"binary": _fit("binary"), "multiclass": _fit("multiclass", 3)}
+    for task, model in models.items():
+        for name, spec_fn in SPECS.items():
+            model.compress(spec=spec_fn())  # recompresses from exact forest
+            p = str(root / f"{task}-{name}.toad")
+            model.save(p)
+            paths[f"{task}/{name}"] = p
+    # legacy v1: PR-2 era bundle without format_version/spec/manifest
+    model = models["binary"]
+    model.compress()
+    arrays = {f: np.asarray(getattr(model.forest, f)) for f in _FOREST_FIELDS}
+    import dataclasses
+
+    cfg = dataclasses.asdict(model.config)
+    cfg.pop("hist_quant_bits")
+    meta = {"config": cfg, "n_bins": model.n_bins,
+            "n_ensembles": model.forest.n_ensembles, "compressed": True}
+    arrays["meta_json"] = np.frombuffer(json.dumps(meta).encode(), np.uint8)
+    arrays["toad_stream"] = model.encoded.data
+    arrays["toad_stream_bits"] = np.asarray(model.encoded.n_bits, np.int64)
+    p = str(root / "legacy-v1.npz")
+    np.savez_compressed(p, **arrays)
+    paths["binary/legacy-v1"] = p
+    return paths
+
+
+def _read_bundle(path):
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["meta_json"].tobytes()).decode())
+        arrays = {k: np.array(z[k]) for k in z.files}
+    return meta, arrays
+
+
+def _write_bundle(path, meta, arrays):
+    arrays = dict(arrays)
+    arrays["meta_json"] = np.frombuffer(json.dumps(meta).encode(), np.uint8)
+    with open(path, "wb") as f:
+        np.savez_compressed(f, **arrays)
+    return str(path)
+
+
+def _stream_of(arrays):
+    return EncodedModel(
+        data=np.array(arrays["toad_stream"], np.uint8),
+        n_bits=int(arrays["toad_stream_bits"]),
+        thr_codebook_bits=(int(arrays["toad_stream_cb_bits"])
+                           if "toad_stream_cb_bits" in arrays else 0),
+    )
+
+
+def _set_bits(data, pos, width, value):
+    """Patch a ``width``-bit MSB-first field at bit ``pos`` of the stream."""
+    data = np.array(data, np.uint8)
+    for i in range(width):
+        bit = (value >> (width - 1 - i)) & 1
+        byte, off = (pos + i) // 8, 7 - ((pos + i) % 8)
+        if bit:
+            data[byte] |= 1 << off
+        else:
+            data[byte] &= ~(1 << off) & 0xFF
+    return data
+
+
+def _codes(diags):
+    return sorted({d.code for d in diags})
+
+
+# --------------------------------------------------- every real artifact: ok
+def test_valid_artifact_matrix(artifacts):
+    """Every artifact the pipeline produces — all specs x binary/multiclass
+    x v1/v2/v3 — passes structural verification with zero findings."""
+    for key, path in artifacts.items():
+        diags = verify_artifact(path)
+        assert not diags, f"{key}: {format_diagnostics(diags)}"
+
+
+def test_verify_model_in_memory(artifacts):
+    m = ToadModel.load(artifacts["binary/thr-codebook"])
+    assert m.verify() == []
+
+
+# ------------------------------------------------------ 6 corruption classes
+def test_corrupt_truncated_payload(artifacts, tmp_path):
+    meta, arrays = _read_bundle(artifacts["binary/exact"])
+    arrays["toad_stream"] = arrays["toad_stream"][:-3]
+    bad = _write_bundle(tmp_path / "trunc.toad", meta, arrays)
+    assert "TOAD001" in _codes(verify_artifact(bad))
+    with pytest.raises(ArtifactError, match="TOAD001"):
+        ToadModel.load(bad)
+
+
+def test_corrupt_codebook_ref_out_of_range(artifacts, tmp_path):
+    meta, arrays = _read_bundle(artifacts["binary/thr-codebook"])
+    enc = _stream_of(arrays)
+    so = stream_offsets(enc)
+    h = so.header
+    # the ref field caps at 2^w - 1; with n_cb not a power of two that value
+    # is out of range, so the patch is a guaranteed defect
+    assert (1 << h["cb_ref_bits"]) - 1 >= h["n_cb"]
+    pos = so.sections["thresholds"][0]
+    patched = _set_bits(enc.data, pos, h["cb_ref_bits"],
+                        (1 << h["cb_ref_bits"]) - 1)
+    assert _codes(verify_stream(EncodedModel(
+        patched, enc.n_bits, enc.thr_codebook_bits))) == ["TOAD007"]
+    arrays["toad_stream"] = patched
+    bad = _write_bundle(tmp_path / "oobref.toad", meta, arrays)
+    assert "TOAD007" in _codes(verify_artifact(bad))
+    with pytest.raises(ArtifactError, match="TOAD007"):
+        ToadModel.load(bad)
+
+
+def test_corrupt_threshold_order(artifacts, tmp_path):
+    meta, arrays = _read_bundle(artifacts["binary/exact"])
+    enc = _stream_of(arrays)
+    so = stream_offsets(enc)
+    h = so.header
+    pos = so.sections["thresholds"][0]
+    for c, w, fl in zip(h["counts"], h["widths"], h["is_float"]):
+        if c >= 2:  # bump the first value above its successor
+            val = {(16, True): 0x7BFF, (32, True): 0x7F7FFFFF}.get(
+                (w, fl), (1 << w) - 1)
+            patched = _set_bits(enc.data, pos, w, val)
+            break
+        pos += c * w
+    else:
+        pytest.skip("no feature with >= 2 thresholds")
+    assert _codes(verify_stream(
+        EncodedModel(patched, enc.n_bits, 0))) == ["TOAD006"]
+    arrays["toad_stream"] = patched
+    bad = _write_bundle(tmp_path / "unsorted.toad", meta, arrays)
+    assert "TOAD006" in _codes(verify_artifact(bad))
+    with pytest.raises(ArtifactError, match="TOAD006"):
+        ToadModel.load(bad)
+
+
+def test_corrupt_manifest_accounting(artifacts, tmp_path):
+    meta, arrays = _read_bundle(artifacts["binary/fp16-leaves"])
+    meta["manifest"]["sections"]["total_bytes"] += 17.0
+    bad = _write_bundle(tmp_path / "manifest.toad", meta, arrays)
+    assert _codes(verify_artifact(bad)) == ["TOAD104"]
+    with pytest.raises(ArtifactError, match="TOAD104"):
+        ToadModel.load(bad)
+
+
+def test_corrupt_version_stamp(artifacts, tmp_path):
+    # a codebook-layout stream stamped v2 would be mis-parsed by a v2 reader
+    meta, arrays = _read_bundle(artifacts["binary/thr-codebook"])
+    meta["format_version"] = 2
+    bad = _write_bundle(tmp_path / "stamp.toad", meta, arrays)
+    assert _codes(verify_artifact(bad)) == ["TOAD103"]
+    with pytest.raises(ArtifactError, match="TOAD103"):
+        ToadModel.load(bad)
+    # an unknown future version is a different defect: TOAD102
+    meta["format_version"] = 99
+    worse = _write_bundle(tmp_path / "future.toad", meta, arrays)
+    assert _codes(verify_artifact(worse)) == ["TOAD102"]
+
+
+def test_corrupt_spec_stream_mismatch(artifacts, tmp_path):
+    meta, arrays = _read_bundle(artifacts["binary/thr-codebook"])
+    meta["spec"]["thr_codebook_bits"] = 3  # stream actually carries 6
+    bad = _write_bundle(tmp_path / "spec.toad", meta, arrays)
+    assert _codes(verify_artifact(bad)) == ["TOAD105"]
+    with pytest.raises(ArtifactError, match="TOAD105"):
+        ToadModel.load(bad)
+
+
+def test_forest_array_defect(artifacts, tmp_path):
+    """Unsorted edge row -> TOAD107 (the dense-array side of the bundle)."""
+    meta, arrays = _read_bundle(artifacts["binary/exact"])
+    e = np.array(arrays["edges"])
+    idx = np.where(np.isfinite(e[0]))[0]
+    assert len(idx) >= 2
+    e[0, idx[0]] = e[0, idx[1]] + 1.0
+    arrays["edges"] = e
+    bad = _write_bundle(tmp_path / "edges.toad", meta, arrays)
+    assert "TOAD107" in _codes(verify_artifact(bad))
+    with pytest.raises(ArtifactError, match="TOAD107"):
+        ToadModel.load(bad)
+
+
+def test_verify_false_skips_structural_check(artifacts, tmp_path):
+    """The forensics opt-out still loads a bundle with a lying manifest."""
+    meta, arrays = _read_bundle(artifacts["binary/exact"])
+    meta["manifest"]["sections"]["total_bytes"] += 17.0
+    bad = _write_bundle(tmp_path / "manifest2.toad", meta, arrays)
+    m = ToadModel.load(bad, verify=False)
+    assert m.is_fitted
+
+
+def test_save_refuses_malformed_model(artifacts, tmp_path):
+    """save() runs the verifier post-encode: a hand-corrupted in-memory
+    model must fail at the producer, not on a device."""
+    m = ToadModel.load(artifacts["binary/exact"])
+    m.encoded = EncodedModel(data=m.encoded.data[:-3],
+                             n_bits=m.encoded.n_bits)
+    with pytest.raises(ArtifactError, match="TOAD001"):
+        m.save(str(tmp_path / "bad.toad"))
+
+
+def test_structural_verify_never_predicts(artifacts, monkeypatch):
+    """The structural check is decode/predict-free by construction — that is
+    what makes it strictly cheaper than the decode+probe verification."""
+    import repro.core.pipeline as pipeline
+
+    def boom(*a, **k):
+        raise AssertionError("structural verification must not predict")
+
+    monkeypatch.setattr(pipeline, "_predict", boom)
+    for key in ("binary/exact", "binary/thr-codebook"):
+        assert verify_artifact(artifacts[key]) == []
+
+
+# ------------------------------------------------------- bounds-checked bitio
+def test_bitreader_rejects_lying_length():
+    with pytest.raises(StreamBoundsError) as ei:
+        BitReader(np.zeros(2, np.uint8), n_bits=17)
+    assert ei.value.pos == 0 and ei.value.width == 17
+
+
+def test_bitreader_read_past_end_has_location():
+    r = BitReader(np.zeros(2, np.uint8), n_bits=10)
+    r.read(8)
+    with pytest.raises(StreamBoundsError) as ei:
+        r.read(3)
+    assert ei.value.pos == 8 and ei.value.width == 3
+    assert isinstance(ei.value, EOFError)  # back-compat contract
+
+
+def test_read_array_matches_scalar_reads():
+    rng = np.random.default_rng(3)
+    w = BitWriter()
+    fields = []
+    for width in (1, 3, 5, 7, 16, 31, 63):
+        vals = rng.integers(0, 1 << min(width, 62), size=9).tolist()
+        fields.append((width, vals))
+        for v in vals:
+            w.write(int(v), width)
+    data, n_bits = w.getvalue(), w.n_bits
+    ra, rs = BitReader(data, n_bits), BitReader(data, n_bits)
+    for width, vals in fields:
+        got = ra.read_array(width, len(vals))
+        assert got.tolist() == [rs.read(width) for _ in vals] == vals
+    assert ra.remaining == rs.remaining == 0
+    with pytest.raises(StreamBoundsError):
+        ra.read_array(8, 1)
+
+
+def test_read_f32_array_roundtrip():
+    w = BitWriter()
+    vals = [0.0, -1.5, 3.25e-3, 7.0e8]
+    for v in vals:
+        w.write_f32(v)
+    got = BitReader(w.getvalue(), w.n_bits).read_f32_array(len(vals))
+    assert got.tolist() == pytest.approx(vals)
+
+
+# ---------------------------------------------------------------- lint rules
+def _lint(tmp_path, code, hot=False, tests_dir=None):
+    d = tmp_path / ("kernels" if hot else "plain")
+    d.mkdir(exist_ok=True)
+    f = d / "mod.py"
+    f.write_text(code)
+    return lint_paths([str(f)], tests_dir=tests_dir)
+
+
+def test_lint_fp32_accumulation(tmp_path):
+    diags = _lint(tmp_path, (
+        "import jax.numpy as jnp\n"
+        "def f(hist, x):\n"
+        "    hist = hist.astype(jnp.bfloat16)\n"
+        "    count = jnp.zeros((4,), dtype=jnp.float16)\n"
+        "    ok = x.astype(jnp.float32)\n"
+        "    return hist, count, ok\n"))
+    assert _codes(diags) == ["TOAD201"] and len(diags) == 2
+    assert all(d.line in (3, 4) for d in diags)
+
+
+def test_lint_traced_python_branch(tmp_path):
+    diags = _lint(tmp_path, (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    if jnp.any(x > 0):\n"
+        "        return 1\n"
+        "    return 0\n"))
+    assert _codes(diags) == ["TOAD202"]
+
+
+def test_lint_jnp_loop_hot_path_only(tmp_path):
+    code = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    s = 0.0\n"
+        "    for i in range(4):\n"
+        "        s = s + jnp.sum(x)\n"
+        "    return s\n")
+    assert _codes(_lint(tmp_path, code, hot=True)) == ["TOAD203"]
+    assert _lint(tmp_path, code, hot=False) == []  # cold paths exempt
+
+
+def test_lint_pallas_interpret_gating(tmp_path):
+    diags = _lint(tmp_path, (
+        "import functools, jax\n"
+        "from jax.experimental import pallas as pl\n"
+        "def run(kernel, x):\n"
+        "    return pl.pallas_call(kernel, out_shape=x)(x)\n"
+        "def gated(kernel, x, interpret):\n"
+        "    return pl.pallas_call(kernel, out_shape=x, interpret=interpret)(x)\n"
+        "@functools.partial(jax.jit, static_argnames=('n',))\n"
+        "def wrapper(x, n, interpret=False):\n"
+        "    return x\n"
+        "@functools.partial(jax.jit, static_argnames=('n', 'interpret'))\n"
+        "def wrapper_ok(x, n, interpret=False):\n"
+        "    return x\n"))
+    assert _codes(diags) == ["TOAD204"] and len(diags) == 2
+    assert {d.line for d in diags} == {4, 8}
+
+
+def test_lint_registry_contract(tmp_path):
+    diags = _lint(tmp_path, (
+        "from repro.core.pipeline import register_stage, CompressionStage\n"
+        "@register_stage\n"
+        "class Broken(CompressionStage):\n"
+        "    pass\n"
+        "@register_stage\n"
+        "class A(CompressionStage):\n"
+        "    name = 'dup'\n"
+        "    def apply(self, ctx): ...\n"
+        "@register_stage\n"
+        "class B(CompressionStage):\n"
+        "    name = 'dup'\n"
+        "    def apply(self, ctx): ...\n"))
+    assert _codes(diags) == ["TOAD205"]
+    msgs = " ".join(d.message for d in diags)
+    assert "name" in msgs and "apply" in msgs and "already registered" in msgs
+
+
+def test_lint_backend_parity_test_required(tmp_path):
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    (tests / "test_something.py").write_text("BACKENDS = ['covered']\n")
+    code = (
+        "from repro.api.backends import register_backend, PredictorBackend\n"
+        "@register_backend\n"
+        "class Covered(PredictorBackend):\n"
+        "    name = 'covered'\n"
+        "    def build(self, model): ...\n"
+        "@register_backend\n"
+        "class Orphan(PredictorBackend):\n"
+        "    name = 'orphan'\n"
+        "    def build(self, model): ...\n")
+    diags = _lint(tmp_path, code, tests_dir=str(tests))
+    assert _codes(diags) == ["TOAD206"]
+    assert "orphan" in diags[0].message
+
+
+def test_lint_src_is_clean_under_baseline():
+    """The whole source tree lints clean modulo the justified baseline —
+    the same invariant the CI static-analysis job enforces."""
+    diags = lint_paths([str(REPO / "src" / "repro")],
+                       tests_dir=str(REPO / "tests"))
+    baseline = Baseline.load(str(REPO / "tools" / "toadcheck_baseline.json"))
+    fresh = baseline.apply(diags)
+    assert fresh == [], format_diagnostics(fresh)
+    assert all(baseline.entries[d.fingerprint()] for d in diags), \
+        "every baselined finding needs a non-empty justification"
+
+
+# ----------------------------------------------------------------- CLI + fmt
+def _toadcheck(*args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, str(REPO / "tools" / "toadcheck.py"), *args],
+        capture_output=True, text=True, cwd=cwd)
+
+
+def test_cli_lint_clean_exit_zero():
+    res = _toadcheck("src/repro")
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_cli_artifact_error_exit_one(artifacts, tmp_path):
+    meta, arrays = _read_bundle(artifacts["binary/exact"])
+    arrays["toad_stream"] = arrays["toad_stream"][:-3]
+    bad = _write_bundle(tmp_path / "trunc.toad", meta, arrays)
+    res = _toadcheck(bad, "--format", "json")
+    assert res.returncode == 1
+    codes = {d["code"] for d in json.loads(res.stdout)}
+    assert "TOAD001" in codes
+
+
+def test_cli_good_artifact_exit_zero(artifacts):
+    res = _toadcheck(artifacts["multiclass/thr-codebook"])
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_cli_missing_target_exit_two(tmp_path):
+    res = _toadcheck(str(tmp_path / "nope.toad"))
+    assert res.returncode == 2
+
+
+def test_diagnostic_format_json_fields(artifacts, tmp_path):
+    meta, arrays = _read_bundle(artifacts["binary/exact"])
+    arrays["toad_stream"] = arrays["toad_stream"][:-3]
+    bad = _write_bundle(tmp_path / "trunc.toad", meta, arrays)
+    doc = json.loads(format_diagnostics(verify_artifact(bad), "json"))
+    d = next(x for x in doc if x["code"] == "TOAD001")
+    assert d["severity"] == "error" and d["hint"]
+    assert d["section"] and d["bit_offset"] >= 0
+    assert "stream:" in d["location"]

@@ -15,8 +15,12 @@ Three passes over README.md, docs/*.md, and src/repro/api/README.md:
    executable, not decorative.  A block can opt out by an immediately
    preceding ``<!-- docs: skip -->`` line (e.g. requires a TPU).
 
-Exit status is non-zero with a per-failure listing.  CI runs this as the
-``docs`` job:
+Exit status encodes the failure category, so CI logs and scripts can tell
+*what kind* of drift happened without parsing the listing: 0 = clean,
+2 = broken links, 3 = unresolvable code references, 4 = failing snippets,
+5 = a documented file is missing, 1 = failures in more than one category.
+Each category also gets a one-line summary at the end of the run.  CI runs
+this as the ``docs`` job:
 
     PYTHONPATH=src python tools/check_docs.py
 """
@@ -42,6 +46,16 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 MODREF_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
 FENCE_RE = re.compile(r"^```(\w*)\s*$")
 SKIP_MARK = "<!-- docs: skip -->"
+
+
+# category -> (exit code, one-line description) — single-category failures
+# exit with their own code, mixed failures with 1
+CATEGORIES = {
+    "links": (2, "broken relative links"),
+    "modrefs": (3, "code references that do not import/resolve"),
+    "snippets": (4, "python snippets that fail to execute"),
+    "missing": (5, "documented files that do not exist"),
+}
 
 
 def check_links(path: str, text: str) -> list[str]:
@@ -111,23 +125,29 @@ def run_snippets(path: str, text: str) -> list[str]:
 
 def main() -> int:
     os.chdir(ROOT)
-    failures = []
+    failures: dict[str, list[str]] = {c: [] for c in CATEGORIES}
     for path in DOC_FILES:
         full = os.path.join(ROOT, path)
         if not os.path.exists(full):
-            failures.append(f"{path}: documented file is missing")
+            failures["missing"].append(f"{path}: documented file is missing")
             continue
         with open(full, encoding="utf-8") as f:
             text = f.read()
-        failures += check_links(path, text)
-        failures += check_modrefs(path, text)
-        failures += run_snippets(path, text)
+        failures["links"] += check_links(path, text)
+        failures["modrefs"] += check_modrefs(path, text)
+        failures["snippets"] += run_snippets(path, text)
         print(f"checked {path}")
-    if failures:
-        print(f"\n{len(failures)} documentation failure(s):")
-        for f in failures:
-            print(" -", f)
-        return 1
+    total = sum(len(v) for v in failures.values())
+    if total:
+        print(f"\n{total} documentation failure(s):")
+        for cat in CATEGORIES:
+            for f in failures[cat]:
+                print(" -", f)
+        hit = [c for c in CATEGORIES if failures[c]]
+        for cat in hit:  # one-line summary per failing category
+            code, desc = CATEGORIES[cat]
+            print(f"{cat}: {len(failures[cat])} {desc} (exit {code})")
+        return CATEGORIES[hit[0]][0] if len(hit) == 1 else 1
     print(f"\nall {len(DOC_FILES)} documentation files pass")
     return 0
 

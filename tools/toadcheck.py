@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""toadcheck — static analysis for .toad artifacts and the repro sources.
+
+Targets are dispatched by kind:
+
+* a directory or ``.py`` file -> the AST lint (``repro.analysis.lint``,
+  codes ``TOAD2xx``);
+* anything else -> the artifact verifier (``repro.analysis.verify``,
+  codes ``TOAD0xx``/``TOAD1xx``), run structurally — no decode-to-predict.
+
+Usage::
+
+    python tools/toadcheck.py                      # lint src/repro
+    python tools/toadcheck.py model.toad           # verify one artifact
+    python tools/toadcheck.py --format json src/repro model.toad
+    python tools/toadcheck.py --write-baseline \
+        --justification "deliberate static unroll" src/repro
+
+Exit codes: 0 = no non-baselined errors; 1 = findings; 2 = usage error.
+Warnings are reported but never fatal.  Grandfathered findings live in
+``tools/toadcheck_baseline.json`` (override with ``--baseline``, disable
+with ``--no-baseline``); every entry carries a justification and is keyed
+by content hash, so unrelated edits don't invalidate it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_REPO / "src"))
+
+from repro.analysis import (  # noqa: E402  (sys.path setup above)
+    Baseline,
+    errors,
+    format_diagnostics,
+    lint_paths,
+    verify_artifact,
+)
+
+DEFAULT_BASELINE = _REPO / "tools" / "toadcheck_baseline.json"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="toadcheck", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("targets", nargs="*", default=["src/repro"],
+                    help="directories/.py files to lint and/or .toad "
+                         "artifacts to verify (default: src/repro)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="grandfathered-findings file (JSON)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report baselined findings too")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="add the current non-baselined findings to the "
+                         "baseline file (requires --justification)")
+    ap.add_argument("--justification", default="",
+                    help="justification recorded with --write-baseline")
+    ap.add_argument("--tests-dir", default=str(_REPO / "tests"),
+                    help="tests directory for the backend-parity rule "
+                         "(TOAD206)")
+    args = ap.parse_args(argv)
+
+    lint_targets, artifact_targets = [], []
+    for t in args.targets:
+        p = Path(t)
+        if not p.exists():
+            print(f"toadcheck: no such target: {t}", file=sys.stderr)
+            return 2
+        (lint_targets if p.is_dir() or p.suffix == ".py"
+         else artifact_targets).append(str(p))
+
+    diags = []
+    if lint_targets:
+        diags.extend(lint_paths(lint_targets, tests_dir=args.tests_dir))
+    for a in artifact_targets:
+        diags.extend(verify_artifact(a))
+
+    baseline = Baseline()
+    if not args.no_baseline and Path(args.baseline).exists():
+        baseline = Baseline.load(args.baseline)
+
+    if args.write_baseline:
+        fresh = baseline.apply(diags)
+        if fresh and not args.justification:
+            print("toadcheck: --write-baseline needs --justification "
+                  "(every grandfathered finding records why it is ok)",
+                  file=sys.stderr)
+            return 2
+        for d in fresh:
+            baseline.entries[d.fingerprint()] = args.justification
+        baseline.save(args.baseline)
+        print(f"baseline: {len(fresh)} finding(s) added to {args.baseline}")
+        return 0
+
+    reported = baseline.apply(diags)
+    suppressed = len(diags) - len(reported)
+    print(format_diagnostics(reported, args.format))
+    fatal = errors(reported)
+    if args.format == "text":
+        tail = f" ({suppressed} baselined)" if suppressed else ""
+        print(f"toadcheck: {len(fatal)} error(s), "
+              f"{len(reported) - len(fatal)} warning(s)/info{tail}")
+    return 1 if fatal else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
