@@ -24,6 +24,7 @@ from repro.analysis.lint import lint_paths
 from repro.analysis.verify import (
     verify_artifact,
     verify_bundle,
+    verify_fleet,
     verify_model,
     verify_stream,
 )
@@ -40,6 +41,7 @@ __all__ = [
     "lint_paths",
     "verify_artifact",
     "verify_bundle",
+    "verify_fleet",
     "verify_model",
     "verify_stream",
 ]

@@ -494,3 +494,15 @@ def verify_model(model) -> list[Diagnostic]:
         "spec": model.spec.to_dict() if model.spec is not None else None,
     }
     return verify_bundle(meta, arrays, path="<in-memory model>")
+
+
+def verify_fleet(paths) -> "dict[str, list[Diagnostic]]":
+    """toadcheck every artifact of a planned fleet (admission pre-check).
+
+    Returns ``{path: diagnostics}`` in input order.  This is what
+    ``launch/fleet.py --dry-run`` prints before any artifact is loaded, and
+    what :class:`~repro.fleet.registry.ModelRegistry` enforces per artifact
+    at admission (via ``repro.api.artifact.load_checked``): a fleet never
+    hosts a bundle with an error-severity finding.
+    """
+    return {str(p): verify_artifact(str(p)) for p in paths}

@@ -5,7 +5,9 @@ micro-batching GBDT serving engine.  See README.md in this package."""
 from repro.api.artifact import (
     TOAD_FORMAT_VERSION,
     ArtifactError,
+    LoadedArtifact,
     load_artifact,
+    load_checked,
     save_artifact,
 )
 from repro.api.backends import (
@@ -32,7 +34,9 @@ from repro.core.pipeline import (
 __all__ = [
     "TOAD_FORMAT_VERSION",
     "ArtifactError",
+    "LoadedArtifact",
     "load_artifact",
+    "load_checked",
     "save_artifact",
     "CompressionReport",
     "CompressionSpec",

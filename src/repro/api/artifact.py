@@ -44,7 +44,7 @@ import json
 import numpy as np
 
 from repro.analysis.diagnostics import errors, format_diagnostics
-from repro.analysis.verify import verify_bundle
+from repro.analysis.verify import verify_artifact, verify_bundle
 from repro.core.layout import EncodedModel, decode, to_packed
 from repro.core.memory import compression_summary, stream_sections
 from repro.core.pipeline import CompressionSpec, _predict, probe_inputs
@@ -163,7 +163,7 @@ def save_artifact(model, path: str, verify: bool = True) -> str:
     return path
 
 
-def load_artifact(path: str, verify: bool = True):
+def load_artifact(path: str, verify: bool = True, _structural: bool = True):
     """Load a .toad bundle back into a :class:`ToadModel`.
 
     Rejects artifacts with a newer format version than this runtime
@@ -194,7 +194,7 @@ def load_artifact(path: str, verify: bool = True):
                 f"this runtime (max {TOAD_FORMAT_VERSION}); upgrade the runtime "
                 f"or re-export the artifact"
             )
-        if verify:
+        if verify and _structural:
             # structural verification first: a malformed stream or lying
             # manifest must be rejected before a single bit is decoded
             bad = errors(verify_bundle(
@@ -238,3 +238,59 @@ def load_artifact(path: str, verify: bool = True):
                         f"atol={atol} (corrupted or hand-edited artifact)"
                     )
     return model
+
+
+@dataclasses.dataclass
+class LoadedArtifact:
+    """Result of :func:`load_checked` — the model plus its admission record.
+
+    ``diagnostics`` holds the *full* toadcheck finding list (warnings
+    included — errors never reach here, they raise), so a serving host can
+    log what it admitted; ``format_version`` is the negotiated ``.toad``
+    format version (1 for legacy pre-versioning bundles).
+    """
+
+    model: object  # ToadModel
+    path: str
+    format_version: int
+    diagnostics: list
+
+    @property
+    def warnings(self) -> list:
+        return [d for d in self.diagnostics if d.severity != "error"]
+
+
+def load_checked(path: str, verify: bool = True) -> LoadedArtifact:
+    """The one artifact load-and-verify path for every consumer.
+
+    ``ToadModel.load``, ``GBDTEngine``, ``launch/serve.py --model`` and the
+    fleet :class:`~repro.fleet.registry.ModelRegistry` all admit artifacts
+    through here, so the admission policy cannot drift between them:
+
+    1. toadcheck structural verification (``repro.analysis.verify``) — any
+       error-severity finding raises :class:`ArtifactError` with the
+       formatted diagnostics before a bit of the stream is decoded,
+    2. the actual load (decode + eval-fingerprint probe check),
+    3. the negotiated format version and the warning-level findings are
+       returned alongside the model for the caller to log.
+
+    ``verify=False`` skips both toadcheck and the fingerprint probe (the
+    historical opt-out for trusted local bundles).
+    """
+    path = str(path)
+    diags: list = []
+    if verify:
+        diags = verify_artifact(path)
+        bad = errors(diags)
+        if bad:
+            raise ArtifactError(
+                f"{path}: structural verification failed "
+                f"({len(bad)} error(s)):\n" + format_diagnostics(bad)
+            )
+    # structural checks already ran above — load still verifies the
+    # fingerprint probe, which needs the decoded arrays
+    model = load_artifact(path, verify=verify, _structural=False)
+    version = int((model.artifact_meta or {}).get("format_version", 1))
+    return LoadedArtifact(
+        model=model, path=path, format_version=version, diagnostics=diags
+    )

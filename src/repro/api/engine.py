@@ -34,9 +34,56 @@ class EngineStats:
     latency_mean_ms: float
     latency_p50_ms: float
     latency_p95_ms: float
+    #: requests waiting in the queue at the moment stats() was taken
+    queue_depth: int = 0
+    #: per shape-bucket occupancy: {bucket_size: {"batches": n, "mean_fill":
+    #: real_rows / (n * bucket_size)}} — shows whether cross-tenant batching
+    #: actually fills the padded buckets or mostly pads
+    batch_occupancy: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+    @staticmethod
+    def merge(parts: "list[EngineStats]") -> "EngineStats":
+        """Aggregate across engines (fleet-wide view).
+
+        Counts and occupancy sum exactly; wall clock is the max (engines run
+        concurrently); latency mean and percentiles are request-weighted
+        averages of the per-engine values — an approximation that is exact
+        for the mean and a reasonable operational summary for p50/p95.
+        """
+        parts = [p for p in parts if p is not None]
+        if not parts:
+            return EngineStats(0, 0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
+        n = sum(p.n_requests for p in parts)
+        wall = max(p.wall_s for p in parts)
+        wavg = (
+            lambda f: sum(f(p) * p.n_requests for p in parts) / n if n else 0.0
+        )
+        occupancy: dict = {}
+        for p in parts:
+            for bucket, o in p.batch_occupancy.items():
+                cur = occupancy.setdefault(bucket, {"batches": 0, "mean_fill": 0.0})
+                tot = cur["batches"] + o["batches"]
+                if tot:
+                    cur["mean_fill"] = (
+                        cur["mean_fill"] * cur["batches"]
+                        + o["mean_fill"] * o["batches"]
+                    ) / tot
+                cur["batches"] = tot
+        return EngineStats(
+            n_requests=n,
+            n_batches=sum(p.n_batches for p in parts),
+            wall_s=wall,
+            req_per_s=n / max(wall, 1e-9),
+            mean_batch=wavg(lambda p: p.mean_batch),
+            latency_mean_ms=wavg(lambda p: p.latency_mean_ms),
+            latency_p50_ms=wavg(lambda p: p.latency_p50_ms),
+            latency_p95_ms=wavg(lambda p: p.latency_p95_ms),
+            queue_depth=sum(p.queue_depth for p in parts),
+            batch_occupancy=occupancy,
+        )
 
 
 class MicroBatchEngine:
@@ -59,6 +106,7 @@ class MicroBatchEngine:
         self._stop = threading.Event()
         self._latencies: list[float] = []
         self._batch_sizes: list[int] = []
+        self._bucket_hits: dict[int, list[int]] = {}  # bucket -> [batches, rows]
         self._t_start = 0.0
         self._t_busy_end = 0.0
 
@@ -83,6 +131,7 @@ class MicroBatchEngine:
         self._stop.clear()
         self._latencies.clear()
         self._batch_sizes.clear()
+        self._bucket_hits.clear()
         # warm the compiled predictor at every bucket shape so steady-state
         # latency never pays a trace (and the stats clock starts after it)
         for b in self._buckets():
@@ -153,6 +202,9 @@ class MicroBatchEngine:
                 continue
             done = time.perf_counter()
             self._batch_sizes.append(n)
+            hit = self._bucket_hits.setdefault(padded, [0, 0])
+            hit[0] += 1
+            hit[1] += n
             for (_, t_in, fut), s in zip(batch, scores):
                 self._latencies.append(done - t_in)
                 fut.set_result(s)
@@ -172,6 +224,14 @@ class MicroBatchEngine:
             latency_mean_ms=float(lat.mean() * 1e3) if n else 0.0,
             latency_p50_ms=float(np.percentile(lat, 50) * 1e3) if n else 0.0,
             latency_p95_ms=float(np.percentile(lat, 95) * 1e3) if n else 0.0,
+            queue_depth=self._queue.qsize(),
+            batch_occupancy={
+                bucket: {
+                    "batches": batches,
+                    "mean_fill": rows / (batches * bucket),
+                }
+                for bucket, (batches, rows) in sorted(self._bucket_hits.items())
+            },
         )
 
 
@@ -192,9 +252,9 @@ class GBDTEngine(MicroBatchEngine):
         max_wait_ms: float = 2.0,
     ):
         if isinstance(model, (str, os.PathLike)):
-            from repro.api.artifact import load_artifact
+            from repro.api.artifact import load_checked
 
-            model = load_artifact(model)
+            model = load_checked(model).model
         fn = model.predictor(backend)
         d = int(model.forest.n_features)
         super().__init__(fn, d, max_batch=max_batch, max_wait_ms=max_wait_ms)

@@ -318,10 +318,15 @@ class ToadModel:
 
     @classmethod
     def load(cls, path: str, verify: bool = True) -> "ToadModel":
-        """Load a .toad artifact (or a legacy pre-versioning .npz bundle)."""
-        from repro.api.artifact import load_artifact
+        """Load a .toad artifact (or a legacy pre-versioning .npz bundle).
 
-        return load_artifact(path, verify=verify)
+        Goes through :func:`repro.api.artifact.load_checked` — the same
+        toadcheck-then-load admission path the serving engine, the serve
+        CLI and the fleet registry use.
+        """
+        from repro.api.artifact import load_checked
+
+        return load_checked(path, verify=verify).model
 
     def __repr__(self) -> str:
         state = (

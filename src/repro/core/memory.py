@@ -164,6 +164,45 @@ def stream_sections(forest: Forest, thr_codebook_bits: int = 0) -> dict:
     }
 
 
+#: the arrays of a PackedEnsemble that are resident at serving time, in the
+#: order they appear on the dataclass.  ``thr_table`` and ``leaf_values`` are
+#: the fp32 value tables a multi-model fleet can intern across models
+#: (``repro.fleet.dedup``): models compressed from the same ladder carry
+#: byte-identical tables.
+PACKED_ARRAYS = (
+    "words",
+    "leaf_ref",
+    "leaf_values",
+    "thr_table",
+    "thr_offsets",
+    "used_features",
+    "base_score",
+)
+
+#: the PACKED_ARRAYS a fleet dedups across models (content-hash interning)
+SHARED_PACKED_ARRAYS = ("thr_table", "leaf_values")
+
+
+def packed_resident_bytes(packed) -> dict:
+    """Per-array resident bytes of a :class:`PackedEnsemble` serving form.
+
+    This is what a serving host actually keeps in memory per model (the
+    stream-level accounting of :func:`stream_sections` is what ships over
+    the wire / sits on flash).  ``total_bytes`` sums every array;
+    ``shareable_bytes`` sums the fp32 value tables that
+    ``repro.fleet.dedup`` can intern across models of a fleet.
+    """
+    out = {
+        name: float(np.asarray(getattr(packed, name)).nbytes)
+        for name in PACKED_ARRAYS
+    }
+    out["shareable_bytes"] = float(
+        sum(out[name] for name in SHARED_PACKED_ARRAYS)
+    )
+    out["total_bytes"] = float(sum(out[name] for name in PACKED_ARRAYS))
+    return out
+
+
 # --------------------------------------------------------------------------
 # Baseline layouts (paper Sec. 4.2 accounting)
 # --------------------------------------------------------------------------

@@ -1,0 +1,35 @@
+"""Multi-model ``.toad`` fleet serving: registry + dedup + router.
+
+The paper's 4-16x artifact shrink compounds at the serving node: a fleet
+host keeps hundreds of compressed forests resident (per-tenant, per-region,
+per-A/B-arm) where a pointer-layout deployment kept a handful.  This
+package is that layer:
+
+* :mod:`repro.fleet.registry` — :class:`ModelRegistry`: toadcheck-verified
+  admission, ``(model_id, version)`` tracking, atomic hot-swap.
+* :mod:`repro.fleet.dedup` — :class:`TablePool` content-hash interning of
+  threshold/leaf codebook tables across models, and
+  :func:`fleet_memory_report` (per-model vs shared resident bytes).
+* :mod:`repro.fleet.engine` — :class:`FleetEngine`: routes by model_id,
+  batches same-model requests across tenants through one
+  ``MicroBatchEngine`` worker per hot model (LRU), drains old versions on
+  hot-swap.
+
+Launch via ``python -m repro.launch.fleet --models dir/`` (or
+``repro.launch.serve --arch toad-fleet --models dir/``); see docs/fleet.md.
+"""
+
+from repro.fleet.dedup import TablePool, fleet_memory_report, intern_model_tables
+from repro.fleet.engine import FleetEngine, FleetStats
+from repro.fleet.registry import ModelEntry, ModelRegistry, UnknownModelError
+
+__all__ = [
+    "FleetEngine",
+    "FleetStats",
+    "ModelEntry",
+    "ModelRegistry",
+    "TablePool",
+    "UnknownModelError",
+    "fleet_memory_report",
+    "intern_model_tables",
+]

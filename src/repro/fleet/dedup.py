@@ -1,0 +1,194 @@
+"""Cross-model codebook dedup: content-addressed interning of value tables.
+
+The paper's compression story compounds at fleet scale only if models
+actually *share* their resident tables.  Models compressed from the same
+budget ladder (one trained forest, different `CompressionSpec` rungs) carry
+byte-identical fp32 threshold tables — the ``threshold_codebook`` stage
+derives the table from the exact forest, so two rungs that differ only in
+leaf bits snap to the same thresholds.  :class:`TablePool` interns those
+tables by content hash so each distinct table is resident once per fleet
+process, and :func:`fleet_memory_report` extends the per-model
+``core.memory`` accounting (``stream_sections`` on the wire,
+``packed_resident_bytes`` in memory) with the per-model vs shared split.
+
+Interning operates on the *host* numpy arrays of the packed serving form
+(``thr_table``, ``leaf_values``) plus the format-3 threshold codebook table
+itself; the jitted backends close over these arrays, and object identity is
+what the dedup tests assert.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+
+import numpy as np
+
+from repro.core.memory import packed_resident_bytes, stream_sections
+
+
+def table_key(arr: np.ndarray) -> tuple:
+    """Content-hash key of a table: (dtype, shape, sha256 of the bytes)."""
+    a = np.ascontiguousarray(np.asarray(arr))
+    return (a.dtype.str, a.shape, hashlib.sha256(a.tobytes()).hexdigest())
+
+
+class TablePool:
+    """Content-addressed intern pool for fleet-shared value tables.
+
+    ``intern(arr)`` returns the canonical (read-only) array for ``arr``'s
+    content — the same object for every byte-identical table, so N models
+    from one ladder keep one resident copy.  Reference counts track how
+    many live registry entries point at each table; ``release`` drops a
+    reference and frees the table when the last owner is swapped out.
+    """
+
+    def __init__(self):
+        self._tables: dict[tuple, np.ndarray] = {}
+        self._refs: dict[tuple, int] = {}
+        self._lock = threading.Lock()
+
+    def intern(self, arr: np.ndarray) -> np.ndarray:
+        key = table_key(arr)
+        with self._lock:
+            hit = self._tables.get(key)
+            if hit is None:
+                hit = np.ascontiguousarray(np.asarray(arr))
+                hit.setflags(write=False)  # shared: nobody may mutate it
+                self._tables[key] = hit
+                self._refs[key] = 0
+            self._refs[key] += 1
+            return hit
+
+    def release(self, arr: np.ndarray) -> None:
+        key = table_key(arr)
+        with self._lock:
+            if key not in self._refs:
+                return
+            self._refs[key] -= 1
+            if self._refs[key] <= 0:
+                del self._refs[key]
+                del self._tables[key]
+
+    def refs(self, arr: np.ndarray) -> int:
+        """Live reference count of ``arr``'s content (0 if not interned)."""
+        with self._lock:
+            return self._refs.get(table_key(arr), 0)
+
+    def stats(self) -> dict:
+        """Unique/duplicate byte accounting over everything interned."""
+        with self._lock:
+            unique_bytes = 0.0
+            shared_bytes = 0.0
+            saved = 0.0
+            n_shared = 0
+            for key, table in self._tables.items():
+                refs = self._refs[key]
+                unique_bytes += table.nbytes
+                if refs > 1:
+                    n_shared += 1
+                    shared_bytes += table.nbytes
+                    saved += (refs - 1) * table.nbytes
+            return {
+                "n_tables": len(self._tables),
+                "n_shared_tables": n_shared,
+                "unique_table_bytes": float(unique_bytes),
+                "shared_table_bytes": float(shared_bytes),
+                "dedup_saved_bytes": float(saved),
+            }
+
+
+@dataclasses.dataclass
+class InternedTables:
+    """The tables a registry entry holds in the pool (released on swap)."""
+
+    arrays: list
+
+    def release_all(self, pool: TablePool) -> None:
+        for a in self.arrays:
+            pool.release(a)
+        self.arrays = []
+
+
+def intern_model_tables(model, pool: TablePool):
+    """Intern a loaded model's shareable tables into ``pool``.
+
+    Replaces ``model.packed.thr_table`` / ``.leaf_values`` (and the decoded
+    twins) with the pool's canonical arrays, and interns the format-3
+    threshold-codebook table itself (the distinct sorted threshold values
+    the stream's per-feature refs resolve against).  Returns
+    ``(interned, thr_codebook_table)`` — ``thr_codebook_table`` is ``None``
+    for classic (non-codebook) streams.
+    """
+    from repro.core.layout import used_threshold_values
+
+    interned = InternedTables(arrays=[])
+    packed, decoded = model.packed, model.decoded
+    for name in ("thr_table", "leaf_values"):
+        shared = pool.intern(getattr(packed, name))
+        interned.arrays.append(shared)
+        setattr(packed, name, shared)
+        if decoded is not None:
+            setattr(decoded, name, shared)
+    cb_table = None
+    if model.encoded is not None and model.encoded.thr_codebook_bits > 0:
+        cb_table = pool.intern(used_threshold_values(model.forest))
+        interned.arrays.append(cb_table)
+    return interned, cb_table
+
+
+def fleet_memory_report(registry) -> dict:
+    """Per-model vs shared resident-byte accounting for a whole fleet.
+
+    Extends the single-model ``core.memory`` accounting: each entry reports
+    its on-the-wire ``stream_sections`` and in-memory
+    ``packed_resident_bytes`` as if it were standalone, plus
+    ``shared_bytes`` — the bytes of its tables that are interned with at
+    least one other model.  Fleet-wide::
+
+        fleet_resident_bytes = standalone_total_bytes - dedup_saved_bytes
+
+    so a 3-model same-ladder fleet reports strictly fewer resident bytes
+    than three standalone processes would.
+    """
+    pool = registry.pool
+    models: dict[str, dict] = {}
+    standalone_total = 0.0
+    for entry in registry.entries():
+        model = entry.model
+        resident = packed_resident_bytes(model.packed)
+        cb_bytes = (
+            float(entry.thr_codebook_table.nbytes)
+            if entry.thr_codebook_table is not None
+            else 0.0
+        )
+        standalone = resident["total_bytes"] + cb_bytes
+        shared = sum(
+            float(np.asarray(a).nbytes)
+            for a in entry.interned.arrays
+            if pool.refs(a) > 1
+        )
+        cb_bits = (
+            model.encoded.thr_codebook_bits if model.encoded is not None else 0
+        )
+        models[entry.model_id] = {
+            "version": entry.version,
+            "format_version": entry.format_version,
+            "standalone_bytes": standalone,
+            "shared_bytes": float(shared),
+            "thr_codebook_table_bytes": cb_bytes,
+            "resident": resident,
+            "sections": stream_sections(model.forest, thr_codebook_bits=cb_bits),
+        }
+        standalone_total += standalone
+    pool_stats = pool.stats()
+    return {
+        "n_models": len(models),
+        "models": models,
+        "standalone_total_bytes": float(standalone_total),
+        "fleet_resident_bytes": float(
+            standalone_total - pool_stats["dedup_saved_bytes"]
+        ),
+        **pool_stats,
+    }

@@ -1,0 +1,211 @@
+"""FleetEngine: one router, many models, warm-backend LRU, hot-swap drain.
+
+Routes single-row requests by ``model_id`` to a per-model
+:class:`~repro.api.engine.MicroBatchEngine` worker, so requests for the
+same model batch *across tenants* — the cross-tenant occupancy shows up in
+``EngineStats.batch_occupancy``.  Backends are built lazily and kept in an
+LRU of at most ``max_hot`` warm workers; a cold model pays one compile on
+first use (``warm()`` pre-pays it), an evicted one drains its queue in the
+background before its worker exits.
+
+**Hot-swap semantics**: the registry bumps an entry's version atomically;
+the router compares the cached backend's version against the registry on
+every route.  On mismatch the old backend is retired — its worker drains
+every already-queued request against the *old* model (those futures
+complete with old-version scores) — while new requests immediately build
+and hit the new version.  No request is dropped and no request ever mixes
+versions within a batch.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro.api.engine import EngineStats, MicroBatchEngine
+from repro.fleet.registry import ModelRegistry, UnknownModelError
+
+__all__ = ["FleetEngine", "FleetStats", "UnknownModelError"]
+
+
+@dataclasses.dataclass
+class FleetStats:
+    """Per-model + fleet-wide serving statistics."""
+
+    per_model: dict          # model_id -> EngineStats (hot backends)
+    fleet: EngineStats       # merged across hot + retired backends
+    n_models: int            # registered in the fleet
+    n_hot: int               # warm backends right now
+    n_retired: int           # backends drained away (swaps + LRU evictions)
+
+    def as_dict(self) -> dict:
+        return {
+            "per_model": {k: v.as_dict() for k, v in self.per_model.items()},
+            "fleet": self.fleet.as_dict(),
+            "n_models": self.n_models,
+            "n_hot": self.n_hot,
+            "n_retired": self.n_retired,
+        }
+
+
+class _HotBackend:
+    """A warm (version-pinned) MicroBatchEngine for one model."""
+
+    def __init__(self, version: int, engine: MicroBatchEngine):
+        self.version = version
+        self.engine = engine
+
+
+class FleetEngine:
+    """Routes requests across every model a :class:`ModelRegistry` hosts."""
+
+    def __init__(
+        self,
+        registry: ModelRegistry,
+        *,
+        backend: str | None = None,
+        max_hot: int = 8,
+        max_batch: int = 256,
+        max_wait_ms: float = 2.0,
+    ):
+        if max_hot < 1:
+            raise ValueError("max_hot must be >= 1")
+        self.registry = registry
+        self.backend = backend
+        self.max_hot = max_hot
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self._hot: "collections.OrderedDict[str, _HotBackend]" = (
+            collections.OrderedDict()
+        )
+        self._lock = threading.RLock()
+        self._started = False
+        self._retired_stats: list[EngineStats] = []
+        self._retire_threads: list[threading.Thread] = []
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "FleetEngine":
+        with self._lock:
+            self._started = True
+            for hot in self._hot.values():
+                hot.engine.start()
+        return self
+
+    def stop(self) -> "FleetEngine":
+        """Stop every backend, draining all queues; join retire threads."""
+        with self._lock:
+            self._started = False
+            hot, self._hot = list(self._hot.values()), collections.OrderedDict()
+        for h in hot:
+            h.engine.stop()
+            self._retired_stats.append(h.engine.stats())
+        self.drain()
+        return self
+
+    def drain(self) -> "FleetEngine":
+        """Block until every retired backend has finished draining."""
+        while True:
+            with self._lock:
+                threads, self._retire_threads = self._retire_threads, []
+            if not threads:
+                return self
+            for t in threads:
+                t.join()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -------------------------------------------------------------- routing
+    def _retire(self, hot: _HotBackend) -> None:
+        """Drain + stop a backend off the request path.
+
+        ``stop()`` lets the worker drain every queued request first, so
+        futures submitted before a swap/eviction complete against the model
+        version they were routed to.
+        """
+
+        def _stop():
+            hot.engine.stop()
+            with self._lock:
+                self._retired_stats.append(hot.engine.stats())
+
+        t = threading.Thread(target=_stop, name="fleet-retire", daemon=True)
+        with self._lock:
+            self._retire_threads.append(t)
+        t.start()
+
+    def _backend_for(self, model_id: str) -> MicroBatchEngine:
+        entry = self.registry.get(model_id)  # raises UnknownModelError
+        with self._lock:
+            hot = self._hot.get(model_id)
+            if hot is not None and hot.version == entry.version:
+                self._hot.move_to_end(model_id)
+                return hot.engine
+            # cold model, or the registry hot-swapped it: build the new
+            # version's backend; the old one drains in the background
+            engine = MicroBatchEngine(
+                entry.model.predictor(self.backend),
+                int(entry.model.forest.n_features),
+                max_batch=self.max_batch,
+                max_wait_ms=self.max_wait_ms,
+            )
+            if self._started:
+                engine.start()
+            if hot is not None:
+                self._retire(hot)
+            self._hot[model_id] = _HotBackend(entry.version, engine)
+            self._hot.move_to_end(model_id)
+            while len(self._hot) > self.max_hot:
+                _, evicted = self._hot.popitem(last=False)
+                self._retire(evicted)
+            return engine
+
+    def warm(self, *model_ids: str) -> "FleetEngine":
+        """Pre-build (and pre-compile) backends for the given models."""
+        for mid in model_ids or self.registry.ids():
+            self._backend_for(mid)
+        return self
+
+    def submit(self, model_id: str, x_row):
+        """Enqueue one (d,) request for ``model_id``; returns a Future."""
+        return self._backend_for(model_id).submit(x_row)
+
+    def predict(self, model_id: str, X) -> np.ndarray:
+        """Direct batched call through ``model_id``'s compiled path."""
+        return self._backend_for(model_id).predict(X)
+
+    def swap(self, model_id: str, path: str):
+        """Registry hot-swap + immediate backend refresh for ``model_id``.
+
+        Returns the new :class:`~repro.fleet.registry.ModelEntry`.  Old
+        queued requests drain on the old version in the background; the
+        new version serves as soon as this returns.
+        """
+        entry = self.registry.swap(model_id, path)
+        self._backend_for(model_id)
+        return entry
+
+    def version(self, model_id: str) -> int:
+        """The serving version currently routed to for ``model_id``."""
+        return self.registry.get(model_id).version
+
+    # ----------------------------------------------------------------- stats
+    def stats(self) -> FleetStats:
+        with self._lock:
+            per_model = {
+                mid: hot.engine.stats() for mid, hot in self._hot.items()
+            }
+            retired = list(self._retired_stats)
+        return FleetStats(
+            per_model=per_model,
+            fleet=EngineStats.merge(list(per_model.values()) + retired),
+            n_models=len(self.registry),
+            n_hot=len(per_model),
+            n_retired=len(retired),
+        )

@@ -1,0 +1,241 @@
+"""The fleet model registry: verified admission, versioning, atomic hot-swap.
+
+A :class:`ModelRegistry` is the source of truth for which ``.toad``
+artifact serves each ``model_id``.  Admission goes through
+``repro.api.artifact.load_checked`` — the same toadcheck-then-load path as
+``ToadModel.load`` and the single-model engine — so a structurally invalid
+bundle never enters a fleet; the negotiated ``.toad`` format version
+(1 legacy / 2 exact / 3 codebook-layout, stamped lowest-sufficient at save
+time) is recorded per entry, and mixed-version fleets serve side by side.
+
+Every admitted model's shareable tables are interned into the registry's
+:class:`~repro.fleet.dedup.TablePool`, so same-ladder models keep one
+resident copy of their threshold/leaf codebook tables.
+
+**Hot-swap** (``swap``): the replacement artifact is fully loaded, verified
+and interned *before* the registry map is touched, then the entry is
+replaced atomically under the lock and its serving ``version`` bumps by
+one.  A failed load leaves the old version serving.  The old entry's
+tables are released from the pool (still referenced by any in-flight
+backend, so draining requests stay valid); the
+:class:`~repro.fleet.engine.FleetEngine` notices the version bump on the
+next routed request, retires the old backend with a queue drain, and sends
+new traffic to the new version.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import glob
+import os
+import threading
+
+import numpy as np
+
+from repro.api.artifact import ArtifactError, load_checked
+from repro.fleet.dedup import InternedTables, TablePool, intern_model_tables
+
+
+class UnknownModelError(KeyError):
+    """Routing/lookup of a model_id the registry does not host."""
+
+    def __init__(self, model_id: str, known):
+        known = sorted(known)
+        super().__init__(
+            f"unknown model_id {model_id!r}; fleet hosts: "
+            + (", ".join(known) if known else "(empty fleet)")
+        )
+        self.model_id = model_id
+
+
+@dataclasses.dataclass
+class ModelEntry:
+    """One (model_id, version) admitted into the fleet."""
+
+    model_id: str
+    version: int            # registry serving version; bumps on every swap
+    path: str
+    model: object           # ToadModel
+    format_version: int     # negotiated .toad format version (1..3)
+    spec_name: str | None
+    thr_codebook_bits: int
+    diagnostics: list       # toadcheck findings at admission (warnings only)
+    thr_codebook_table: np.ndarray | None
+    interned: InternedTables
+
+    def describe(self) -> dict:
+        """Manifest row for this entry (what --dry-run prints)."""
+        meta = (self.model.artifact_meta or {}).get("manifest", {})
+        return {
+            "version": self.version,
+            "path": self.path,
+            "format_version": self.format_version,
+            "spec": self.spec_name,
+            "thr_codebook_bits": self.thr_codebook_bits,
+            "n_trees": int(self.model.forest.n_trees),
+            "n_features": int(self.model.forest.n_features),
+            "encoded_stream_bytes": meta.get("encoded_stream_bytes"),
+            "n_warnings": len(self.diagnostics),
+        }
+
+
+class ModelRegistry:
+    """Hosts many verified ``.toad`` models behind stable model ids."""
+
+    def __init__(self, pool: TablePool | None = None, verify: bool = True):
+        self.pool = pool if pool is not None else TablePool()
+        self.verify = verify
+        self._entries: dict[str, ModelEntry] = {}
+        self._lock = threading.RLock()
+
+    # ------------------------------------------------------------- admission
+    def _admit(self, model_id: str, path: str, version: int) -> ModelEntry:
+        loaded = load_checked(path, verify=self.verify)
+        model = loaded.model
+        if not model.is_compressed:
+            # a fleet serves the packed artifact; lossless-compress in place
+            model.compress()
+        interned, cb_table = intern_model_tables(model, self.pool)
+        return ModelEntry(
+            model_id=model_id,
+            version=version,
+            path=loaded.path,
+            model=model,
+            format_version=loaded.format_version,
+            spec_name=model.spec.name if model.spec is not None else None,
+            thr_codebook_bits=(
+                model.encoded.thr_codebook_bits
+                if model.encoded is not None
+                else 0
+            ),
+            diagnostics=loaded.diagnostics,
+            thr_codebook_table=cb_table,
+            interned=interned,
+        )
+
+    def register(self, model_id: str, path: str) -> ModelEntry:
+        """Admit a new model (version 1).  Raises on duplicate id or any
+        toadcheck error-severity finding."""
+        entry = self._admit(model_id, path, version=1)
+        with self._lock:
+            if model_id in self._entries:
+                entry.interned.release_all(self.pool)
+                raise ValueError(
+                    f"model_id {model_id!r} is already registered "
+                    f"(version {self._entries[model_id].version}); "
+                    f"use swap() to hot-swap it"
+                )
+            self._entries[model_id] = entry
+        return entry
+
+    def swap(self, model_id: str, path: str) -> ModelEntry:
+        """Atomically hot-swap ``model_id`` to a new artifact.
+
+        The new artifact is loaded + verified + interned *before* the map
+        changes; a failure leaves the old version serving.  On success the
+        serving version bumps by one and the old entry's tables are
+        released from the pool.
+        """
+        with self._lock:
+            old = self._entries.get(model_id)
+        if old is None:
+            raise UnknownModelError(model_id, self.ids())
+        entry = self._admit(model_id, path, version=old.version + 1)
+        with self._lock:
+            current = self._entries.get(model_id)
+            if current is not old and current is not None:
+                # a concurrent swap won; ours still supersedes it
+                entry.version = current.version + 1
+                old = current
+            self._entries[model_id] = entry
+        old.interned.release_all(self.pool)
+        return entry
+
+    def remove(self, model_id: str) -> None:
+        with self._lock:
+            entry = self._entries.pop(model_id, None)
+        if entry is None:
+            raise UnknownModelError(model_id, self.ids())
+        entry.interned.release_all(self.pool)
+
+    @classmethod
+    def from_dir(
+        cls,
+        directory: str,
+        pool: TablePool | None = None,
+        verify: bool = True,
+    ) -> "ModelRegistry":
+        """Build a registry from every ``*.toad`` / ``*.npz`` artifact in a
+        directory — model_id is the file stem.  Any artifact that fails
+        admission aborts the whole fleet build (:class:`ArtifactError`),
+        naming *every* offending file — a rollout fixes all of them in one
+        round trip, not one per launch attempt."""
+        reg = cls(pool=pool, verify=verify)
+        paths = sorted(
+            glob.glob(os.path.join(directory, "*.toad"))
+            + glob.glob(os.path.join(directory, "*.npz"))
+        )
+        if not paths:
+            raise ArtifactError(
+                f"{directory}: no .toad/.npz artifacts found"
+            )
+        if verify:
+            from repro.analysis.diagnostics import errors, format_diagnostics
+            from repro.analysis.verify import verify_fleet
+
+            bad = {
+                p: errs
+                for p, diags in verify_fleet(paths).items()
+                if (errs := errors(diags))
+            }
+            if bad:
+                detail = "\n".join(
+                    f"{p}:\n{format_diagnostics(errs)}" for p, errs in bad.items()
+                )
+                raise ArtifactError(
+                    f"{directory}: {len(bad)} of {len(paths)} artifact(s) "
+                    f"failed structural verification:\n{detail}"
+                )
+        for p in paths:
+            model_id = os.path.splitext(os.path.basename(p))[0]
+            reg.register(model_id, p)
+        return reg
+
+    # --------------------------------------------------------------- lookup
+    def get(self, model_id: str) -> ModelEntry:
+        with self._lock:
+            entry = self._entries.get(model_id)
+        if entry is None:
+            raise UnknownModelError(model_id, self.ids())
+        return entry
+
+    def ids(self) -> list[str]:
+        with self._lock:
+            return sorted(self._entries)
+
+    def entries(self) -> list[ModelEntry]:
+        with self._lock:
+            return [self._entries[k] for k in sorted(self._entries)]
+
+    def __contains__(self, model_id: str) -> bool:
+        with self._lock:
+            return model_id in self._entries
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    # ------------------------------------------------------------ reporting
+    def manifest(self) -> dict:
+        """The fleet manifest: every hosted (model_id, version) + dedup."""
+        return {
+            "n_models": len(self),
+            "models": {e.model_id: e.describe() for e in self.entries()},
+            "dedup": self.pool.stats(),
+        }
+
+    def memory_report(self) -> dict:
+        """Per-model vs shared resident bytes (see ``repro.fleet.dedup``)."""
+        from repro.fleet.dedup import fleet_memory_report
+
+        return fleet_memory_report(self)

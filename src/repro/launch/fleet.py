@@ -1,0 +1,221 @@
+"""Fleet serving launcher: many ``.toad`` artifacts behind one router.
+
+    # Dry run: toadcheck every artifact, print the planned fleet manifest
+    # (model ids, versions, negotiated formats, dedup plan) — no serving:
+    PYTHONPATH=src python -m repro.launch.fleet --models fleet_dir/ --dry-run
+
+    # Real serve mode: route client requests across every hosted model,
+    # check routed predictions against each model's reference backend:
+    PYTHONPATH=src python -m repro.launch.fleet --models fleet_dir/ \
+        --requests 2048 --clients 4
+
+    # CI smoke: short run + optional live hot-swap mid-traffic:
+    PYTHONPATH=src python -m repro.launch.fleet --models fleet_dir/ \
+        --smoke --swap tenant_a=new_model.toad
+
+Also reachable through the serving CLI's arch dispatch::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch toad-fleet \
+        --models fleet_dir/ --smoke
+
+Admission is fail-fast: any artifact in the directory with an
+error-severity toadcheck finding aborts the launch with exit status 1
+(the registry refuses it), so a malformed bundle can never ride into a
+fleet rollout.  Per-model probe queries reuse each artifact's eval
+fingerprint probe set, so the parity check exercises the same inputs the
+artifact was fingerprinted on.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+
+def _probe_queries(model, n: int) -> np.ndarray:
+    """(n, d) queries from the artifact's own eval-fingerprint probe set."""
+    from repro.core.pipeline import probe_inputs
+
+    fp = (model.artifact_meta or {}).get("fingerprint") or {}
+    probe = probe_inputs(
+        model.forest, n=int(fp.get("n_probe", 32)), seed=int(fp.get("seed", 7))
+    )
+    reps = -(-n // len(probe))  # ceil
+    return np.tile(probe, (reps, 1))[:n]
+
+
+def _print_manifest(manifest: dict) -> None:
+    print(f"fleet manifest: {manifest['n_models']} model(s)")
+    for mid, row in manifest["models"].items():
+        enc = row["encoded_stream_bytes"]
+        stream = f" stream={enc:.0f} B" if enc is not None else ""
+        print(
+            f"  {mid:20s} v{row['version']} format-v{row['format_version']} "
+            f"spec={row['spec'] or 'pre-spec':16s} "
+            f"trees={row['n_trees']:4d}{stream}"
+        )
+    dd = manifest["dedup"]
+    print(
+        f"dedup: {dd['n_tables']} table(s), {dd['n_shared_tables']} shared, "
+        f"{dd['dedup_saved_bytes']:.0f} B saved"
+    )
+
+
+def serve_fleet(args) -> dict:
+    """Load every artifact in ``--models`` into a verified registry and
+    either print the planned manifest (``--dry-run``) or serve routed
+    traffic with per-model parity checks (and optional live ``--swap``)."""
+    from repro.api.artifact import ArtifactError
+    from repro.fleet import FleetEngine, ModelRegistry
+
+    t0 = time.time()
+    try:
+        registry = ModelRegistry.from_dir(args.models)
+    except ArtifactError as e:
+        raise SystemExit(f"fleet admission refused: {e}")
+    print(f"admitted {len(registry)} model(s) in {time.time() - t0:.2f}s "
+          f"(toadcheck-verified)")
+    _print_manifest(registry.manifest())
+
+    if getattr(args, "dry_run", False):
+        report = registry.memory_report()
+        print(
+            f"planned residency: {report['standalone_total_bytes']:.0f} B "
+            f"standalone -> {report['fleet_resident_bytes']:.0f} B fleet "
+            f"({report['dedup_saved_bytes']:.0f} B deduped)"
+        )
+        print(json.dumps(report, indent=2, default=float))
+        return report
+
+    n_requests = 256 if args.smoke else args.requests
+    backend = getattr(args, "backend", None)
+    if backend in ("auto", None):
+        backend = None
+    engine = FleetEngine(
+        registry,
+        backend=backend,
+        max_hot=getattr(args, "max_hot", 8),
+        max_batch=args.max_batch,
+        max_wait_ms=args.max_wait_ms,
+    )
+
+    ids = registry.ids()
+    queries = {
+        mid: _probe_queries(registry.get(mid).model, n_requests)
+        for mid in ids
+    }
+    errs: list[float] = []
+    rng = np.random.default_rng(0)
+    # each client interleaves model ids, so same-model requests from
+    # different clients land in the same batches (cross-tenant batching)
+    plans = [
+        [ids[int(k)] for k in rng.integers(0, len(ids), size=n_requests // args.clients)]
+        for _ in range(args.clients)
+    ]
+
+    def client(plan):
+        futs = []
+        for i, mid in enumerate(plan):
+            futs.append((mid, i, engine.submit(mid, queries[mid][i])))
+        for mid, i, fut in futs:
+            got = fut.result()
+            ref = registry.get(mid).model.predict(
+                queries[mid][i : i + 1], backend="reference"
+            )[0]
+            errs.append(float(np.abs(got - ref).max()))
+
+    with engine:
+        engine.warm(*ids)
+        threads = [
+            threading.Thread(target=client, args=(p,)) for p in plans
+        ]
+        t1 = time.time()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.time() - t1
+
+        swapped = {}
+        for spec in getattr(args, "swap", None) or []:
+            mid, _, path = spec.partition("=")
+            if not path:
+                raise SystemExit(f"--swap expects model_id=path, got {spec!r}")
+            before = engine.version(mid)
+            entry = engine.swap(mid, path)
+            X = _probe_queries(entry.model, 64)
+            got = np.stack([f.result() for f in
+                            [engine.submit(mid, x) for x in X]])
+            ref = entry.model.predict(X, backend="reference")
+            err = float(np.abs(got - ref).max())
+            assert err <= 1e-5, f"post-swap parity {err:.2e} > 1e-5"
+            assert entry.version == before + 1
+            swapped[mid] = entry.version
+            print(f"hot-swapped {mid!r}: v{before} -> v{entry.version} "
+                  f"(post-swap parity {err:.2e})")
+
+    stats = engine.stats()
+    n_served = stats.fleet.n_requests
+    max_err = max(errs) if errs else 0.0
+    print(
+        f"served {len(errs)} routed requests across {len(ids)} models in "
+        f"{wall:.2f}s — {len(errs) / max(wall, 1e-9):.1f} req/s, "
+        f"mean batch {stats.fleet.mean_batch:.1f}, "
+        f"p95 {stats.fleet.latency_p95_ms:.2f} ms, "
+        f"{stats.n_retired} retired backend(s)"
+    )
+    print(f"parity vs per-model reference: max|Δ| = {max_err:.2e}")
+    report = registry.memory_report()
+    print(
+        f"residency: {report['standalone_total_bytes']:.0f} B standalone -> "
+        f"{report['fleet_resident_bytes']:.0f} B fleet "
+        f"({report['dedup_saved_bytes']:.0f} B deduped across models)"
+    )
+    assert max_err <= 1e-5
+    assert n_served >= len(errs)
+    return {
+        "stats": stats.as_dict(),
+        "memory": report,
+        "max_err": max_err,
+        "swapped": swapped,
+    }
+
+
+def add_fleet_args(ap: argparse.ArgumentParser) -> None:
+    """Fleet flags, shared with the serve CLI's --arch toad-fleet path."""
+    ap.add_argument("--models", default=None,
+                    help="directory of .toad artifacts; model_id = file stem")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="verify + print the planned fleet manifest and "
+                         "residency report without serving")
+    ap.add_argument("--max-hot", type=int, default=8,
+                    help="LRU size of warm per-model backends")
+    ap.add_argument("--swap", action="append", default=None,
+                    metavar="MODEL_ID=PATH",
+                    help="after the traffic run, hot-swap MODEL_ID to the "
+                         "artifact at PATH and assert the new version serves")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    add_fleet_args(ap)
+    ap.add_argument("--backend", default="auto",
+                    help="predictor backend: auto|reference|packed|pallas")
+    ap.add_argument("--requests", type=int, default=2048)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short run for CI (256 requests)")
+    args = ap.parse_args()
+    if not args.models:
+        ap.error("--models is required")
+    serve_fleet(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,11 @@
     PYTHONPATH=src python -m repro.launch.serve --arch toad-gbdt \
         --model model.toad --smoke
 
+    # Fleet path — a directory of .toad artifacts behind one router with
+    # cross-model codebook dedup and hot-swap (see repro.launch.fleet):
+    PYTHONPATH=src python -m repro.launch.serve --arch toad-fleet \
+        --models fleet_dir/ --smoke
+
 ``--model`` is the deployment path: artifacts are produced offline (e.g.
 ``examples/train_toad.py --compress-budget B --export-artifact m.toad``,
 which walks the budget ladder — exact -> fp16 leaves -> leaf/threshold
@@ -124,33 +129,38 @@ def serve_gbdt(args) -> dict:
     n_requests = 256 if args.smoke else args.requests
     rng = np.random.default_rng(0)
     if getattr(args, "model", None):
-        from repro.analysis import errors, format_diagnostics, verify_artifact
+        from repro.api.artifact import ArtifactError, load_checked
 
-        print(f"verifying artifact {args.model} ...")
-        diags = verify_artifact(args.model)
-        bad = errors(diags)
-        if bad:
+        print(f"verifying + loading artifact {args.model} ...")
+        try:
+            # the one shared admission path (toadcheck, then load +
+            # fingerprint probe) — same as ToadModel.load and the fleet
+            # registry, so serving policy cannot drift
+            loaded = load_checked(args.model)
+        except ArtifactError as e:
             # a serving host never decodes a structurally invalid bundle
-            print(format_diagnostics(bad))
-            raise SystemExit(
-                f"refusing to serve {args.model}: {len(bad)} structural "
-                f"error(s) — see toadcheck output above"
-            )
-        warn = [d for d in diags if d.severity != "error"]
-        print(f"toadcheck: ok ({len(warn)} warning(s))")
-        print(f"loading prebuilt artifact {args.model} ...")
-        model = ToadModel.load(args.model)
+            raise SystemExit(f"refusing to serve: {e}")
+        print(f"toadcheck: ok ({len(loaded.warnings)} warning(s))")
+        model = loaded.model
         if not model.is_compressed:
             model.compress()
         meta = model.artifact_meta or {}
         manifest = meta.get("manifest", {})
         spec = meta.get("spec") or {}
-        print(f"artifact: format v{meta.get('format_version', 1)}, "
+        print(f"artifact: format v{loaded.format_version}, "
               f"spec {spec.get('name', 'pre-spec')!r}, "
               f"{manifest.get('encoded_stream_bytes', 0):.0f} B encoded, "
               f"{manifest.get('n_trees', int(model.forest.n_trees))} trees")
-        d = model.forest.n_features
-        X = rng.normal(size=(max(n_requests, 256), d)).astype(np.float32)
+        # probe with the artifact's own eval-fingerprint probe set (tiled to
+        # the request count), so the smoke parity check exercises exactly
+        # the inputs the artifact was fingerprinted on at save time
+        from repro.core.pipeline import probe_inputs
+
+        fp = meta.get("fingerprint") or {}
+        probe = probe_inputs(model.forest, n=int(fp.get("n_probe", 32)),
+                             seed=int(fp.get("seed", 7)))
+        n_pool = max(n_requests, 256)
+        X = np.tile(probe, (-(-n_pool // len(probe)), 1))[:n_pool]
     else:
         # always the reduced workload: the full config is the 16.7M-row
         # dry-run shape, not something to train in-process on a serving host
@@ -206,9 +216,14 @@ def serve_gbdt(args) -> dict:
 
 
 def main():
+    from repro.launch.fleet import add_fleet_args
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
+    # fleet engine (--arch toad-fleet): --models dir/, --dry-run, --max-hot,
+    # --swap id=path
+    add_fleet_args(ap)
     # LM engine
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -229,7 +244,13 @@ def main():
 
     from repro.configs import is_gbdt_arch
 
-    if is_gbdt_arch(args.arch):
+    if args.arch in ("toad-fleet", "toad_fleet"):
+        from repro.launch.fleet import serve_fleet
+
+        if not args.models:
+            ap.error("--arch toad-fleet requires --models dir/")
+        serve_fleet(args)
+    elif is_gbdt_arch(args.arch):
         serve_gbdt(args)
     else:
         serve_lm(args)

@@ -1,0 +1,344 @@
+"""The fleet subsystem: verified admission, mixed-version serving,
+cross-model codebook dedup, atomic hot-swap with old-version drain, LRU
+warm backends, and the shared load_checked admission helper."""
+
+import argparse
+import dataclasses
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import ArtifactError, CompressionSpec, EngineStats, ToadModel
+from repro.api.artifact import load_checked
+from repro.fleet import (
+    FleetEngine,
+    ModelRegistry,
+    TablePool,
+    UnknownModelError,
+)
+
+ATOL = 1e-5
+
+
+def _train(seed=0, flip=False):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(400, 6)).astype(np.float32)
+    if flip:
+        y = (X[:, 2] - X[:, 0] > 0).astype(np.float32)
+    else:
+        y = (X[:, 0] + X[:, 1] ** 2 > 0.7).astype(np.float32)
+    m = ToadModel(task="binary", n_bins=32, n_rounds=12, max_depth=3).fit(X, y)
+    return m, X
+
+
+@pytest.fixture(scope="module")
+def fleet_dir(tmp_path_factory):
+    """A mixed fleet: three same-ladder v3 artifacts, one v2 exact, one
+    legacy pre-versioning v1 bundle, plus a different-model swap target."""
+    d = tmp_path_factory.mktemp("fleet")
+    m, X = _train()
+    m.compress(spec=CompressionSpec.codebook_full(6, 4))
+    m.save(str(d / "cb_a.toad"))
+    m.compress(spec=CompressionSpec.codebook_full(6, 2))
+    m.save(str(d / "cb_b.toad"))
+    m.compress(spec=CompressionSpec.thr_codebook(6))
+    m.save(str(d / "cb_c.toad"))
+    m.compress(spec=CompressionSpec.exact())
+    m.save(str(d / "exact_v2.toad"))
+
+    # legacy v1: a PR-2-era npz without format_version / spec / fingerprint
+    from repro.api.model import _FOREST_FIELDS
+
+    arrays = {f: np.asarray(getattr(m.forest, f)) for f in _FOREST_FIELDS}
+    cfg = dataclasses.asdict(m.config)
+    cfg.pop("hist_quant_bits")
+    meta = {"config": cfg, "n_bins": m.n_bins,
+            "n_ensembles": m.forest.n_ensembles, "compressed": True}
+    arrays["meta_json"] = np.frombuffer(json.dumps(meta).encode(), np.uint8)
+    arrays["toad_stream"] = m.encoded.data
+    arrays["toad_stream_bits"] = np.asarray(m.encoded.n_bits, np.int64)
+    with open(d / "legacy_v1.npz", "wb") as f:
+        np.savez_compressed(f, **arrays)
+
+    m2, _ = _train(seed=9, flip=True)
+    m2.compress(spec=CompressionSpec.fp16_leaves())
+    m2.save(str(d / "swap_target.toad"))
+    return d, X
+
+
+# ----------------------------------------------------------- load_checked
+def test_load_checked_is_the_shared_admission_path(fleet_dir):
+    d, _ = fleet_dir
+    loaded = load_checked(str(d / "cb_a.toad"))
+    assert loaded.format_version == 3
+    assert loaded.model.is_compressed
+    assert not [x for x in loaded.diagnostics if x.severity == "error"]
+    legacy = load_checked(str(d / "legacy_v1.npz"))
+    assert legacy.format_version == 1
+    v2 = load_checked(str(d / "exact_v2.toad"))
+    assert v2.format_version == 2
+
+
+def test_load_checked_refuses_malformed(fleet_dir, tmp_path):
+    d, _ = fleet_dir
+    with np.load(d / "cb_a.toad") as z:
+        arrays = {k: np.array(z[k]) for k in z.files}
+    arrays["toad_stream"] = arrays["toad_stream"][:-3]
+    bad = tmp_path / "bad.toad"
+    with open(bad, "wb") as f:
+        np.savez_compressed(f, **arrays)
+    with pytest.raises(ArtifactError, match="structural verification"):
+        load_checked(str(bad))
+    reg = ModelRegistry()
+    with pytest.raises(ArtifactError):
+        reg.register("bad", str(bad))
+    assert len(reg) == 0  # failed admission leaves the fleet untouched
+
+
+# --------------------------------------------------------------- registry
+def test_mixed_version_fleet_serves_side_by_side(fleet_dir):
+    d, X = fleet_dir
+    reg = ModelRegistry.from_dir(str(d))
+    # every artifact in the dir admitted, incl. the v1 legacy bundle
+    assert "legacy_v1" in reg and "exact_v2" in reg and "cb_a" in reg
+    versions = {mid: reg.get(mid).format_version for mid in reg.ids()}
+    assert versions["legacy_v1"] == 1
+    assert versions["exact_v2"] == 2
+    assert versions["cb_a"] == 3
+    with FleetEngine(reg, max_batch=32) as eng:
+        for mid in reg.ids():
+            got = eng.predict(mid, X[:64])
+            ref = reg.get(mid).model.predict(X[:64], backend="reference")
+            np.testing.assert_allclose(got, ref, rtol=ATOL, atol=ATOL)
+
+
+def test_registry_rejects_duplicate_and_unknown(fleet_dir):
+    d, _ = fleet_dir
+    reg = ModelRegistry()
+    reg.register("m", str(d / "cb_a.toad"))
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("m", str(d / "cb_b.toad"))
+    with pytest.raises(UnknownModelError, match="fleet hosts: m"):
+        reg.get("nope")
+    with pytest.raises(UnknownModelError):
+        reg.swap("nope", str(d / "cb_b.toad"))
+
+
+# ------------------------------------------------------------------ dedup
+def test_dedup_interns_same_ladder_tables(fleet_dir):
+    d, _ = fleet_dir
+    reg = ModelRegistry()
+    a = reg.register("a", str(d / "cb_a.toad"))
+    b = reg.register("b", str(d / "cb_b.toad"))
+    c = reg.register("c", str(d / "cb_c.toad"))
+    # same ladder -> identical thresholds -> one resident table object
+    assert a.model.packed.thr_table is b.model.packed.thr_table
+    assert b.model.packed.thr_table is c.model.packed.thr_table
+    assert a.thr_codebook_table is b.thr_codebook_table
+    # the decoded twin points at the same interned array
+    assert a.model.decoded.thr_table is a.model.packed.thr_table
+    # leaf tables differ across rungs (different leaf codebook bits)
+    assert a.model.packed.leaf_values is not b.model.packed.leaf_values
+    assert reg.pool.refs(a.model.packed.thr_table) == 3
+
+
+def test_fleet_memory_report_shared_lt_standalone(fleet_dir):
+    """Acceptance: a 3-model same-ladder fleet is strictly smaller resident
+    than the sum of standalone per-model bytes."""
+    d, _ = fleet_dir
+    reg = ModelRegistry()
+    for mid, name in [("a", "cb_a.toad"), ("b", "cb_b.toad"), ("c", "cb_c.toad")]:
+        reg.register(mid, str(d / name))
+    rep = reg.memory_report()
+    assert rep["n_models"] == 3
+    assert rep["fleet_resident_bytes"] < rep["standalone_total_bytes"]
+    assert rep["dedup_saved_bytes"] > 0
+    assert rep["n_shared_tables"] >= 1
+    for row in rep["models"].values():
+        # per-model rows carry both accounting bases
+        assert row["resident"]["total_bytes"] > 0
+        assert abs(
+            row["sections"]["total_bytes"]
+            - sum(v for k, v in row["sections"].items() if k != "total_bytes")
+        ) < 1e-6
+        assert row["shared_bytes"] > 0  # all three share the thr table
+
+
+def test_pool_release_on_swap_and_remove(fleet_dir):
+    d, _ = fleet_dir
+    reg = ModelRegistry()
+    a = reg.register("a", str(d / "cb_a.toad"))
+    b = reg.register("b", str(d / "cb_b.toad"))
+    thr = a.model.packed.thr_table
+    assert reg.pool.refs(thr) == 2
+    reg.swap("a", str(d / "swap_target.toad"))  # different ladder
+    assert reg.pool.refs(thr) == 1  # old entry released, b still holds it
+    reg.remove("b")
+    assert reg.pool.refs(thr) == 0
+
+
+# --------------------------------------------------------------- hot-swap
+def test_hot_swap_under_concurrent_submits(fleet_dir):
+    d, X = fleet_dir
+    reg = ModelRegistry()
+    old = reg.register("m", str(d / "cb_a.toad"))
+    new_path = str(d / "swap_target.toad")
+    old_ref = old.model.predict(X[:64], backend="reference")
+
+    with FleetEngine(reg, max_batch=16, max_wait_ms=1.0) as eng:
+        eng.warm("m")
+        futs_old = [eng.submit("m", X[i]) for i in range(64)]
+        entry = eng.swap("m", new_path)  # mid-traffic version bump
+        futs_new = [eng.submit("m", X[i]) for i in range(64)]
+        got_old = np.stack([f.result(timeout=30) for f in futs_old])
+        got_new = np.stack([f.result(timeout=30) for f in futs_new])
+        eng.drain()
+
+    assert entry.version == 2 and eng.registry.get("m").version == 2
+    new_ref = entry.model.predict(X[:64], backend="reference")
+    # old-version futures completed against the old model, new requests hit
+    # the new version — and the two models genuinely disagree
+    np.testing.assert_allclose(got_old, old_ref, rtol=ATOL, atol=ATOL)
+    np.testing.assert_allclose(got_new, new_ref, rtol=ATOL, atol=ATOL)
+    assert float(np.abs(old_ref - new_ref).max()) > 1e-4
+
+    stats = eng.stats()
+    assert stats.n_retired >= 1  # the drained old-version backend
+    assert stats.fleet.n_requests == 128
+
+
+def test_swap_failure_leaves_old_version_serving(fleet_dir, tmp_path):
+    d, X = fleet_dir
+    reg = ModelRegistry()
+    reg.register("m", str(d / "cb_a.toad"))
+    with np.load(d / "cb_b.toad") as z:
+        arrays = {k: np.array(z[k]) for k in z.files}
+    arrays["toad_stream"] = arrays["toad_stream"][:-3]
+    bad = tmp_path / "bad_swap.toad"
+    with open(bad, "wb") as f:
+        np.savez_compressed(f, **arrays)
+    with pytest.raises(ArtifactError):
+        reg.swap("m", str(bad))
+    entry = reg.get("m")
+    assert entry.version == 1 and entry.path.endswith("cb_a.toad")
+
+
+# ----------------------------------------------------------------- engine
+def test_router_rejects_unknown_model_id(fleet_dir):
+    d, X = fleet_dir
+    reg = ModelRegistry()
+    reg.register("m", str(d / "cb_a.toad"))
+    with FleetEngine(reg) as eng:
+        with pytest.raises(UnknownModelError, match="unknown model_id"):
+            eng.submit("ghost", X[0])
+        with pytest.raises(UnknownModelError):
+            eng.predict("ghost", X[:4])
+
+
+def test_lru_eviction_keeps_serving(fleet_dir):
+    d, X = fleet_dir
+    reg = ModelRegistry.from_dir(str(d))
+    ids = [i for i in reg.ids() if i != "swap_target"][:3]
+    with FleetEngine(reg, max_hot=1, max_batch=16) as eng:
+        for _ in range(2):  # revisits re-warm evicted models
+            for mid in ids:
+                got = eng.predict(mid, X[:16])
+                ref = reg.get(mid).model.predict(X[:16], backend="reference")
+                np.testing.assert_allclose(got, ref, rtol=ATOL, atol=ATOL)
+        eng.drain()
+        assert eng.stats().n_hot == 1
+
+
+# ------------------------------------------------------------ EngineStats
+def test_engine_stats_queue_depth_and_occupancy(fleet_dir):
+    d, X = fleet_dir
+    reg = ModelRegistry()
+    reg.register("m", str(d / "cb_a.toad"))
+    with FleetEngine(reg, max_batch=16, max_wait_ms=1.0) as eng:
+        futs = [eng.submit("m", X[i]) for i in range(48)]
+        [f.result(timeout=30) for f in futs]
+        s = eng.stats().per_model["m"]
+    # backward-compatible dict: every historical key still present
+    keys = set(s.as_dict())
+    assert {"n_requests", "n_batches", "wall_s", "req_per_s", "mean_batch",
+            "latency_mean_ms", "latency_p50_ms", "latency_p95_ms"} <= keys
+    assert s.queue_depth == 0  # drained
+    assert s.batch_occupancy  # at least one bucket was hit
+    total = sum(o["batches"] for o in s.batch_occupancy.values())
+    assert total == s.n_batches
+    for bucket, o in s.batch_occupancy.items():
+        assert 0.0 < o["mean_fill"] <= 1.0
+        assert bucket >= 1
+
+
+def test_engine_stats_merge():
+    a = EngineStats(10, 2, 1.0, 10.0, 5.0, 1.0, 1.0, 2.0,
+                    queue_depth=1, batch_occupancy={8: {"batches": 2, "mean_fill": 0.5}})
+    b = EngineStats(30, 3, 2.0, 15.0, 10.0, 3.0, 3.0, 6.0,
+                    queue_depth=2, batch_occupancy={8: {"batches": 3, "mean_fill": 1.0}})
+    m = EngineStats.merge([a, b])
+    assert m.n_requests == 40 and m.n_batches == 5
+    assert m.wall_s == 2.0 and m.queue_depth == 3
+    assert abs(m.latency_mean_ms - (10 * 1.0 + 30 * 3.0) / 40) < 1e-9
+    occ = m.batch_occupancy[8]
+    assert occ["batches"] == 5
+    assert abs(occ["mean_fill"] - (2 * 0.5 + 3 * 1.0) / 5) < 1e-9
+    empty = EngineStats.merge([])
+    assert empty.n_requests == 0
+
+
+# -------------------------------------------------------------------- CLI
+def test_serve_fleet_smoke_with_swap(fleet_dir):
+    from repro.launch.fleet import serve_fleet
+
+    d, _ = fleet_dir
+    ns = argparse.Namespace(
+        models=str(d), dry_run=False, smoke=True, requests=64, clients=2,
+        backend=None, max_hot=8, max_batch=32, max_wait_ms=1.0,
+        swap=[f"cb_a={d / 'swap_target.toad'}"],
+    )
+    out = serve_fleet(ns)
+    assert out["max_err"] <= ATOL
+    assert out["swapped"] == {"cb_a": 2}
+    assert out["memory"]["fleet_resident_bytes"] < out["memory"]["standalone_total_bytes"]
+
+
+def test_serve_fleet_dry_run(fleet_dir):
+    from repro.launch.fleet import serve_fleet
+
+    d, _ = fleet_dir
+    ns = argparse.Namespace(models=str(d), dry_run=True, smoke=True)
+    report = serve_fleet(ns)
+    assert report["n_models"] == 6
+    assert report["fleet_resident_bytes"] <= report["standalone_total_bytes"]
+
+
+def test_serve_gbdt_smoke_uses_fingerprint_probe(fleet_dir, capsys, monkeypatch):
+    """--model smoke traffic must come from the artifact's own fingerprint
+    probe set, not an independent random batch."""
+    from repro.core.pipeline import probe_inputs
+    from repro.launch.serve import serve_gbdt
+
+    d, _ = fleet_dir
+    path = str(d / "cb_a.toad")
+    meta = ToadModel.load(path).artifact_meta
+    fp = meta["fingerprint"]
+
+    seen = {}
+    import repro.launch.serve as serve_mod
+    real = probe_inputs
+
+    def spy(forest, n=64, seed=0):
+        seen["n"], seen["seed"] = n, seed
+        out = real(forest, n=n, seed=seed)
+        seen["probe"] = out
+        return out
+
+    monkeypatch.setattr("repro.core.pipeline.probe_inputs", spy)
+    ns = argparse.Namespace(arch="toad-gbdt", backend="reference", model=path,
+                            requests=64, clients=2, max_batch=32,
+                            max_wait_ms=1.0, smoke=True)
+    serve_gbdt(ns)
+    assert seen["n"] == fp["n_probe"] and seen["seed"] == fp["seed"]
