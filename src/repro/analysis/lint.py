@@ -27,6 +27,12 @@ review convention but nothing enforced mechanically:
 * **TOAD206** — every registered backend name must appear quoted somewhere
   under ``tests/``: the <=1e-5 parity contract is only real if a test
   exercises the backend by name.
+* **TOAD207** — in the serving layer (``api/engine.py`` and ``fleet/``):
+  ``queue.Queue()`` constructed without ``maxsize=`` is an unbounded
+  queue — overload becomes latency collapse instead of typed load
+  shedding (the exact bug PR 8 removed); and a bare ``except:`` swallows
+  ``KeyboardInterrupt``/``SystemExit`` in threads whose liveness the
+  supervisor depends on.
 
 The lint is syntactic (no type inference): rules are tuned for this
 repository's idiom (``import jax.numpy as jnp``) and intentionally err
@@ -49,6 +55,9 @@ _HALF_DTYPES = {"bfloat16", "float16", "bf16", "f16"}
 #: path fragments that mark a file as a hot path for TOAD203
 _HOT_PARTS = (os.sep + "kernels" + os.sep,
               os.sep + "gbdt" + os.sep + "trainer.py")
+#: path fragments that mark a file as serving-layer code for TOAD207
+_SERVING_PARTS = (os.sep + "api" + os.sep + "engine.py",
+                  os.sep + "fleet" + os.sep)
 
 
 def _root_name(node: ast.AST) -> str:
@@ -94,10 +103,12 @@ def _const_strings(node: ast.AST) -> set[str]:
 
 
 class _FileLint(ast.NodeVisitor):
-    def __init__(self, path: str, source: str, hot: bool):
+    def __init__(self, path: str, source: str, hot: bool,
+                 serving: bool = False):
         self.path = path
         self.lines = source.splitlines()
         self.hot = hot
+        self.serving = serving
         self.diags: list[Diagnostic] = []
         # (registry, name) -> (path, line); shared across files by lint_paths
         self.registered: dict[tuple[str, str], tuple[str, int]] = {}
@@ -222,10 +233,36 @@ class _FileLint(ast.NodeVisitor):
             else:
                 self.registered[key] = (self.path, node.lineno)
 
+    # ---- TOAD207: serving-layer robustness --------------------------------
+    def _check_unbounded_queue(self, node: ast.Call) -> None:
+        if not self.serving:
+            return
+        if not (isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("Queue", "LifoQueue", "PriorityQueue")
+                and _root_name(node.func) == "queue"):
+            return
+        has_maxsize = bool(node.args) or any(
+            kw.arg in ("maxsize", None) for kw in node.keywords  # None = **kw
+        )
+        if not has_maxsize:
+            self.diag("TOAD207", node,
+                      "queue.Queue() without maxsize in the serving layer: "
+                      "an unbounded queue turns overload into latency "
+                      "collapse; pass maxsize= (0 = deliberate unbounded)")
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        if self.serving and node.type is None:
+            self.diag("TOAD207", node,
+                      "bare `except:` in the serving layer catches "
+                      "SystemExit/KeyboardInterrupt inside worker threads; "
+                      "catch Exception (or narrower)")
+        self.generic_visit(node)
+
     # ---- dispatch ----------------------------------------------------------
     def visit_Call(self, node: ast.Call) -> None:
         self._check_half_cast(node)
         self._check_pallas_call(node)
+        self._check_unbounded_queue(node)
         self.generic_visit(node)
 
     def visit_Assign(self, node: ast.Assign) -> None:
@@ -282,7 +319,8 @@ def lint_paths(paths: list[str],
                                     message=f"file does not parse: {e}"))
             continue
         hot = any(part in str(f) for part in _HOT_PARTS)
-        lint = _FileLint(str(f), source, hot=hot)
+        serving = any(part in str(f) for part in _SERVING_PARTS)
+        lint = _FileLint(str(f), source, hot=hot, serving=serving)
         lint.registered = registered  # shared: dup names across files
         lint.visit(tree)
         diags.extend(lint.diags)

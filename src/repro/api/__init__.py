@@ -18,8 +18,24 @@ from repro.api.backends import (
     register_backend,
     resolve_backend,
 )
-from repro.api.engine import EngineStats, GBDTEngine, MicroBatchEngine
+from repro.api.engine import (
+    EngineStats,
+    GBDTEngine,
+    MicroBatchEngine,
+    fallback_chain,
+)
 from repro.api.model import NotFittedError, ToadModel
+from repro.api.resilience import (
+    BadRequest,
+    CircuitBreaker,
+    DeadlineExceeded,
+    EngineError,
+    EngineStopped,
+    Overloaded,
+    ResiliencePolicy,
+    WorkerCrashed,
+    backoff_delays,
+)
 from repro.core.pipeline import (
     CompressionReport,
     CompressionSpec,
@@ -55,6 +71,16 @@ __all__ = [
     "EngineStats",
     "GBDTEngine",
     "MicroBatchEngine",
+    "fallback_chain",
     "NotFittedError",
     "ToadModel",
+    "BadRequest",
+    "CircuitBreaker",
+    "DeadlineExceeded",
+    "EngineError",
+    "EngineStopped",
+    "Overloaded",
+    "ResiliencePolicy",
+    "WorkerCrashed",
+    "backoff_delays",
 ]

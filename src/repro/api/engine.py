@@ -10,6 +10,21 @@ re-traces, runs one prediction, and resolves the per-request futures.
 ``(n, d) -> (n, C)`` function.  ``GBDTEngine`` wires it to a
 :class:`~repro.api.model.ToadModel` through any registered predictor
 backend — the serving path and the parity contract are the same seam.
+
+**Resilience** (:mod:`repro.api.resilience`): with a
+:class:`~repro.api.resilience.ResiliencePolicy` the engine bounds its
+queue (full queue -> typed ``Overloaded`` at admission, load shedding
+instead of latency collapse), enforces per-request deadlines both at
+dequeue (expired requests complete with ``DeadlineExceeded`` without
+wasting a predict) and inside ``submit().result()``, retries failed batch
+predicts with deterministic seeded backoff, and walks a **fallback chain**
+of degraded-but-correct backends (``pallas -> packed -> reference``, all
+inside the <=1e-5 parity contract) guarded by per-backend circuit
+breakers.  A supervisor catches worker crashes, fails the in-flight
+futures with a typed ``WorkerCrashed`` error, and restarts the worker up
+to ``policy.restart_budget`` times.  The invariant either way: **every**
+submitted future resolves with a result or a typed exception — ``stop()``
+sweeps anything still queued.
 """
 
 from __future__ import annotations
@@ -22,6 +37,54 @@ import threading
 import time
 
 import numpy as np
+
+from repro.api.resilience import (
+    BadRequest,
+    CircuitBreaker,
+    DeadlineExceeded,
+    EngineError,
+    EngineStopped,
+    Overloaded,
+    ResiliencePolicy,
+    WorkerCrashed,
+)
+
+#: backend names from most-accelerated to most-conservative; a fallback
+#: chain is the suffix after the primary (see :func:`fallback_chain`)
+DEGRADATION_ORDER = ("pallas", "packed", "reference")
+
+
+def fallback_chain(model, primary: str) -> list:
+    """``[(name, predict_fn), ...]`` for every backend less accelerated
+    than ``primary`` in :data:`DEGRADATION_ORDER`.
+
+    An unknown (custom) primary falls back through ``packed`` then
+    ``reference``.  The returned functions come from ``model.predictor``,
+    which caches per backend; jax traces them lazily on first use, so an
+    unfaulted engine never pays for its fallbacks.
+    """
+    order = DEGRADATION_ORDER
+    start = order.index(primary) + 1 if primary in order else 1
+    return [(name, model.predictor(name)) for name in order[start:]]
+
+
+class _EngineFuture(concurrent.futures.Future):
+    """A Future that enforces the request deadline inside ``result()``."""
+
+    _deadline_t: float | None = None
+
+    def result(self, timeout=None):
+        if self._deadline_t is not None:
+            remaining = self._deadline_t - time.perf_counter()
+            if timeout is None or remaining < timeout:
+                try:
+                    return super().result(timeout=max(remaining, 0.0))
+                except concurrent.futures.TimeoutError:
+                    raise DeadlineExceeded(
+                        "request deadline exceeded while waiting for the "
+                        "result"
+                    ) from None
+        return super().result(timeout)
 
 
 @dataclasses.dataclass
@@ -40,6 +103,20 @@ class EngineStats:
     #: real_rows / (n * bucket_size)}} — shows whether cross-tenant batching
     #: actually fills the padded buckets or mostly pads
     batch_occupancy: dict = dataclasses.field(default_factory=dict)
+    #: admissions rejected with Overloaded (bounded queue full)
+    n_shed: int = 0
+    #: requests that expired in the queue (DeadlineExceeded at dequeue)
+    n_deadline_expired: int = 0
+    #: worker restarts after a crash (supervisor)
+    n_worker_restarts: int = 0
+    #: batch predict retries (before backend fallback / failure)
+    n_predict_retries: int = 0
+    #: batches served by a non-primary backend (degraded but correct)
+    n_fallback_batches: int = 0
+    #: per-backend circuit-breaker state: {backend: closed|open|half_open}
+    breaker_state: dict = dataclasses.field(default_factory=dict)
+    #: the backend that served the most recent batch
+    active_backend: str = ""
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -52,6 +129,8 @@ class EngineStats:
         concurrently); latency mean and percentiles are request-weighted
         averages of the per-engine values — an approximation that is exact
         for the mean and a reasonable operational summary for p50/p95.
+        Per-backend breaker state and the active backend are per-engine
+        facts and stay empty on the merged view.
         """
         parts = [p for p in parts if p is not None]
         if not parts:
@@ -83,6 +162,11 @@ class EngineStats:
             latency_p95_ms=wavg(lambda p: p.latency_p95_ms),
             queue_depth=sum(p.queue_depth for p in parts),
             batch_occupancy=occupancy,
+            n_shed=sum(p.n_shed for p in parts),
+            n_deadline_expired=sum(p.n_deadline_expired for p in parts),
+            n_worker_restarts=sum(p.n_worker_restarts for p in parts),
+            n_predict_retries=sum(p.n_predict_retries for p in parts),
+            n_fallback_batches=sum(p.n_fallback_batches for p in parts),
         )
 
 
@@ -96,28 +180,90 @@ class MicroBatchEngine:
         *,
         max_batch: int = 256,
         max_wait_ms: float = 2.0,
+        policy: ResiliencePolicy | None = None,
+        fallbacks=(),
+        backend_name: str = "primary",
+        faults=None,
+        fault_tag: str = "",
     ):
         self._predict = predict_fn
         self.n_features = n_features
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
-        self._queue: queue.Queue = queue.Queue()
+        self.policy = policy if policy is not None else ResiliencePolicy()
+        self._deadline_s = self.policy.deadline_ms / 1e3
+        self._chain: list = [(backend_name, predict_fn)] + list(fallbacks)
+        self._breakers = [
+            CircuitBreaker(self.policy.breaker_threshold,
+                           self.policy.breaker_cooldown_ms / 1e3)
+            for _ in self._chain
+        ]
+        self._faults = faults
+        self._fault_tag = fault_tag
+        self._queue: queue.Queue = queue.Queue(
+            maxsize=max(0, self.policy.max_queue_depth)
+        )
         self._worker: threading.Thread | None = None
         self._stop = threading.Event()
+        #: serializes submit()'s stopped-check-then-enqueue against stop()'s
+        #: flag-set-then-drain, closing the late-enqueue TOCTOU window
+        self._admission_lock = threading.Lock()
+        self._stopping = False
+        self._crashed = False
+        self._inflight: list = []
         self._latencies: list[float] = []
         self._batch_sizes: list[int] = []
         self._bucket_hits: dict[int, list[int]] = {}  # bucket -> [batches, rows]
         self._t_start = 0.0
         self._t_busy_end = 0.0
+        self._n_shed = 0
+        self._n_deadline = 0
+        self._n_restarts = 0
+        self._n_crashes = 0
+        self._n_retries = 0
+        self._n_fallback = 0
+        self._active_idx = 0
+        self._backoff_rng = np.random.default_rng(self.policy.seed)
 
     # ---------------------------------------------------------------- client
     def submit(self, x_row) -> concurrent.futures.Future:
-        """Enqueue one (d,) raw-feature request; resolves to a (C,) score."""
-        if self._worker is None:
-            raise RuntimeError("engine not started")
-        fut: concurrent.futures.Future = concurrent.futures.Future()
-        row = np.asarray(x_row, dtype=np.float32).reshape(self.n_features)
-        self._queue.put((row, time.perf_counter(), fut))
+        """Enqueue one (d,) raw-feature request; resolves to a (C,) score.
+
+        Typed failures: :class:`EngineStopped` when the engine is not
+        started / stopped / crashed out of its restart budget;
+        :class:`Overloaded` when the bounded queue is full; a returned
+        future carrying :class:`BadRequest` when the row cannot be shaped
+        to the model's feature width.
+        """
+        t_in = time.perf_counter()
+        fut = _EngineFuture()
+        if self._deadline_s:
+            fut._deadline_t = t_in + self._deadline_s
+        try:
+            row = np.asarray(x_row, dtype=np.float32).reshape(self.n_features)
+        except Exception as exc:
+            # resolve, don't raise: the malformed row must never reach the
+            # worker (np.stack would kill the whole batch) and async
+            # clients expect the error on the future they hold
+            fut.set_exception(BadRequest(
+                f"cannot shape request of size {np.asarray(x_row).size} to "
+                f"({self.n_features},): {exc}"
+            ))
+            return fut
+        with self._admission_lock:
+            if self._worker is None or self._stopping:
+                raise EngineStopped(
+                    "engine not started" if not self._crashed else
+                    "engine worker crashed out of its restart budget"
+                )
+            try:
+                self._queue.put_nowait((row, t_in, fut))
+            except queue.Full:
+                self._n_shed += 1
+                fut.set_exception(Overloaded(
+                    f"queue full ({self.policy.max_queue_depth} deep); "
+                    f"request shed at admission"
+                ))
         return fut
 
     def predict(self, X) -> np.ndarray:
@@ -129,24 +275,52 @@ class MicroBatchEngine:
         if self._worker is not None:
             return self
         self._stop.clear()
+        self._stopping = False
+        self._crashed = False
         self._latencies.clear()
         self._batch_sizes.clear()
         self._bucket_hits.clear()
+        self._n_shed = self._n_deadline = 0
+        self._n_restarts = self._n_crashes = 0
+        self._n_retries = self._n_fallback = 0
+        self._active_idx = 0
         # warm the compiled predictor at every bucket shape so steady-state
         # latency never pays a trace (and the stats clock starts after it)
-        for b in self._buckets():
-            self._predict(np.zeros((b, self.n_features), np.float32))
+        try:
+            for b in self._buckets():
+                self._predict(np.zeros((b, self.n_features), np.float32))
+        except Exception:
+            if len(self._chain) == 1:
+                raise
+            # a broken primary with fallbacks available is a degraded
+            # start, not a failed one: trip its breaker and serve on
+            self._breakers[0].trip()
         self._t_start = time.perf_counter()
-        self._worker = threading.Thread(target=self._run, name="gbdt-engine", daemon=True)
+        self._worker = threading.Thread(
+            target=self._supervise, name="gbdt-engine", daemon=True
+        )
         self._worker.start()
         return self
 
     def stop(self) -> "MicroBatchEngine":
+        """Stop the worker after draining the queue.
+
+        Guaranteed post-condition: every future ever returned by
+        ``submit()`` is resolved — drained requests with results, anything
+        left behind by a crashed worker with a typed error — and late
+        ``submit()`` calls raise :class:`EngineStopped` instead of
+        enqueueing into a queue no worker will drain.
+        """
         if self._worker is None:
             return self
+        with self._admission_lock:
+            self._stopping = True  # no admissions from here on
         self._stop.set()
         self._worker.join()
         self._worker = None
+        # the worker drains the queue before exiting; anything still queued
+        # means it crashed out — resolve those futures, never strand them
+        self._fail_pending(EngineStopped("engine stopped"))
         return self
 
     def __enter__(self):
@@ -154,6 +328,17 @@ class MicroBatchEngine:
 
     def __exit__(self, *exc):
         self.stop()
+
+    def _fail_pending(self, err: Exception) -> int:
+        n = 0
+        while True:
+            try:
+                _, _, fut = self._queue.get_nowait()
+            except queue.Empty:
+                return n
+            if not fut.done():
+                fut.set_exception(err)
+                n += 1
 
     def _buckets(self):
         b, out = 1, []
@@ -169,6 +354,38 @@ class MicroBatchEngine:
                 return b
         return self.max_batch
 
+    def _supervise(self):
+        """Run the worker loop, restarting it after crashes.
+
+        A crash (an exception escaping :meth:`_run`, e.g. an injected
+        worker fault) fails the in-flight futures with a typed
+        :class:`WorkerCrashed` and restarts the loop, up to
+        ``policy.restart_budget`` restarts; past the budget the engine
+        fails every queued future and refuses new admissions.
+        """
+        while True:
+            try:
+                self._run()
+                return  # clean stop
+            except Exception as exc:  # worker crash
+                err = WorkerCrashed(f"engine worker crashed: {exc!r}")
+                err.__cause__ = exc
+                inflight, self._inflight = self._inflight, []
+                for _, _, fut in inflight:
+                    if not fut.done():
+                        fut.set_exception(err)
+                self._n_crashes += 1
+                if (
+                    self._n_crashes > self.policy.restart_budget
+                    or self._stop.is_set()
+                ):
+                    with self._admission_lock:
+                        self._crashed = True
+                        self._stopping = True
+                    self._fail_pending(err)
+                    return
+                self._n_restarts += 1
+
     def _run(self):
         while not (self._stop.is_set() and self._queue.empty()):
             try:
@@ -176,15 +393,37 @@ class MicroBatchEngine:
             except queue.Empty:
                 continue
             batch = [first]
-            deadline = time.perf_counter() + self.max_wait_s
+            wait_until = time.perf_counter() + self.max_wait_s
             while len(batch) < self.max_batch:
-                remaining = deadline - time.perf_counter()
+                remaining = wait_until - time.perf_counter()
                 if remaining <= 0 and self._queue.empty():
                     break
                 try:
                     batch.append(self._queue.get(timeout=max(remaining, 0.0)))
                 except queue.Empty:
                     break
+            self._inflight = batch
+            if self._faults is not None:
+                # the injected-worker-crash point: raises with the batch in
+                # hand, exercising the supervisor's in-flight failing
+                self._faults.fire("worker", model=self._fault_tag)
+            if self._deadline_s:
+                now = time.perf_counter()
+                live = []
+                for item in batch:
+                    if now - item[1] > self._deadline_s:
+                        self._n_deadline += 1
+                        if not item[2].done():
+                            item[2].set_exception(DeadlineExceeded(
+                                "request expired in the queue before a "
+                                "prediction was attempted"
+                            ))
+                    else:
+                        live.append(item)
+                batch = live
+                self._inflight = live
+                if not batch:
+                    continue
             rows = np.stack([b[0] for b in batch])
             n = rows.shape[0]
             padded = self._bucket(n)
@@ -193,12 +432,14 @@ class MicroBatchEngine:
                     [rows, np.zeros((padded - n, self.n_features), np.float32)]
                 )
             try:
-                scores = np.asarray(self._predict(rows))[:n]
+                scores = self._predict_batch(rows)[:n]
             except Exception as exc:
                 # never strand clients: fail this batch's futures and keep
                 # the worker alive for the rest of the queue
                 for _, _, fut in batch:
-                    fut.set_exception(exc)
+                    if not fut.done():
+                        fut.set_exception(exc)
+                self._inflight = []
                 continue
             done = time.perf_counter()
             self._batch_sizes.append(n)
@@ -207,8 +448,67 @@ class MicroBatchEngine:
             hit[1] += n
             for (_, t_in, fut), s in zip(batch, scores):
                 self._latencies.append(done - t_in)
-                fut.set_result(s)
+                if not fut.done():
+                    fut.set_result(s)
+            self._inflight = []
             self._t_busy_end = done
+
+    def _predict_batch(self, rows: np.ndarray) -> np.ndarray:
+        """One batch through the backend chain: retries with deterministic
+        backoff on the active backend, then on to the next breaker-allowed
+        fallback.  A success closes the backend's breaker; exhausting a
+        backend's retries records one consecutive-failure toward opening
+        it."""
+        last_exc: Exception | None = None
+
+        def attempt(idx: int) -> np.ndarray | None:
+            nonlocal last_exc
+            name, fn = self._chain[idx]
+            for retry in range(self.policy.max_retries + 1):
+                try:
+                    if self._faults is not None:
+                        self._faults.fire(
+                            "predict", model=self._fault_tag, backend=name
+                        )
+                    out = np.asarray(fn(rows))
+                except Exception as exc:
+                    last_exc = exc
+                    if retry < self.policy.max_retries:
+                        self._n_retries += 1
+                        time.sleep(self._backoff_s(retry))
+                    continue
+                self._breakers[idx].record_success()
+                self._active_idx = idx
+                if idx > 0:
+                    self._n_fallback += 1
+                return out
+            self._breakers[idx].record_failure()
+            return None
+
+        attempted = False
+        for idx in range(len(self._chain)):
+            if not self._breakers[idx].allow():
+                continue
+            attempted = True
+            out = attempt(idx)
+            if out is not None:
+                return out
+        if not attempted:
+            # every breaker is open mid-cooldown; degraded-but-serving
+            # beats down, so bypass the breaker on the most-conservative
+            # backend rather than failing the batch unattempted
+            out = attempt(len(self._chain) - 1)
+            if out is not None:
+                return out
+        raise last_exc if last_exc is not None else EngineError(
+            "no backend available (all circuit breakers open)"
+        )
+
+    def _backoff_s(self, retry: int) -> float:
+        p = self.policy
+        step = p.backoff_base_ms * p.backoff_mult**retry
+        jitter = 1.0 + p.backoff_jitter * float(self._backoff_rng.random())
+        return (step * jitter) / 1e3
 
     # ----------------------------------------------------------------- stats
     def stats(self) -> EngineStats:
@@ -232,6 +532,16 @@ class MicroBatchEngine:
                 }
                 for bucket, (batches, rows) in sorted(self._bucket_hits.items())
             },
+            n_shed=self._n_shed,
+            n_deadline_expired=self._n_deadline,
+            n_worker_restarts=self._n_restarts,
+            n_predict_retries=self._n_retries,
+            n_fallback_batches=self._n_fallback,
+            breaker_state={
+                name: br.state
+                for (name, _), br in zip(self._chain, self._breakers)
+            },
+            active_backend=self._chain[self._active_idx][0],
         )
 
 
@@ -241,6 +551,12 @@ class GBDTEngine(MicroBatchEngine):
     ``model`` may also be a path to a prebuilt ``.toad`` artifact — the
     deployment flow: compile/compress once, ship the artifact, serve it
     without retraining.
+
+    With a :class:`~repro.api.resilience.ResiliencePolicy` whose
+    ``fallback`` is set, the engine builds the degraded-backend chain from
+    the backend registry (:func:`fallback_chain`): a ``pallas`` engine
+    falls back to ``packed`` then ``reference`` when its breaker opens —
+    slower, but inside the <=1e-5 parity contract.
     """
 
     def __init__(
@@ -250,13 +566,34 @@ class GBDTEngine(MicroBatchEngine):
         backend: str | None = None,
         max_batch: int = 256,
         max_wait_ms: float = 2.0,
+        policy: ResiliencePolicy | None = None,
+        faults=None,
+        fault_tag: str = "",
     ):
         if isinstance(model, (str, os.PathLike)):
             from repro.api.artifact import load_checked
 
             model = load_checked(model).model
+        from repro.api.backends import resolve_backend
+
         fn = model.predictor(backend)
+        primary = resolve_backend(backend, compressed=model.is_compressed).name
+        fallbacks = (
+            fallback_chain(model, primary)
+            if policy is not None and policy.fallback
+            else ()
+        )
         d = int(model.forest.n_features)
-        super().__init__(fn, d, max_batch=max_batch, max_wait_ms=max_wait_ms)
+        super().__init__(
+            fn,
+            d,
+            max_batch=max_batch,
+            max_wait_ms=max_wait_ms,
+            policy=policy,
+            fallbacks=fallbacks,
+            backend_name=primary,
+            faults=faults,
+            fault_tag=fault_tag,
+        )
         self.model = model
         self.backend = backend or "auto"

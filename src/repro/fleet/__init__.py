@@ -14,6 +14,10 @@ package is that layer:
   batches same-model requests across tenants through one
   ``MicroBatchEngine`` worker per hot model (LRU), drains old versions on
   hot-swap.
+* :mod:`repro.fleet.faults` — :class:`FaultPlan`: deterministic fault
+  injection (predict raise, worker crash, admit failure, slow predict)
+  behind the engines' test-only hook, plus the :class:`FutureLedger`
+  stranded-future leak checker.  See docs/resilience.md.
 
 Launch via ``python -m repro.launch.fleet --models dir/`` (or
 ``repro.launch.serve --arch toad-fleet --models dir/``); see docs/fleet.md.
@@ -21,11 +25,16 @@ Launch via ``python -m repro.launch.fleet --models dir/`` (or
 
 from repro.fleet.dedup import TablePool, fleet_memory_report, intern_model_tables
 from repro.fleet.engine import FleetEngine, FleetStats
+from repro.fleet.faults import Fault, FaultPlan, FutureLedger, InjectedFault
 from repro.fleet.registry import ModelEntry, ModelRegistry, UnknownModelError
 
 __all__ = [
+    "Fault",
+    "FaultPlan",
     "FleetEngine",
     "FleetStats",
+    "FutureLedger",
+    "InjectedFault",
     "ModelEntry",
     "ModelRegistry",
     "TablePool",

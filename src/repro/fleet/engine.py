@@ -8,6 +8,17 @@ LRU of at most ``max_hot`` warm workers; a cold model pays one compile on
 first use (``warm()`` pre-pays it), an evicted one drains its queue in the
 background before its worker exits.
 
+**Resilience**: constructed with a
+:class:`~repro.api.resilience.ResiliencePolicy`, every per-model backend
+gets the bounded queue / deadline / supervisor / breaker+fallback
+machinery of :class:`~repro.api.engine.MicroBatchEngine`, with the
+fallback chain built per model from the backend registry
+(``pallas -> packed -> reference``).  :class:`FleetStats` surfaces the
+per-model breaker state and active backend plus fleet-wide shed / expiry
+/ restart counters.  A ``faults=`` :class:`~repro.fleet.faults.FaultPlan`
+threads through to every backend (tagged by model_id) and, via the
+registry, to artifact admission — the chaos tests' hook.
+
 **Hot-swap semantics**: the registry bumps an entry's version atomically;
 the router compares the cached backend's version against the registry on
 every route.  On mismatch the old backend is retired — its worker drains
@@ -25,7 +36,7 @@ import threading
 
 import numpy as np
 
-from repro.api.engine import EngineStats, MicroBatchEngine
+from repro.api.engine import EngineStats, MicroBatchEngine, fallback_chain
 from repro.fleet.registry import ModelRegistry, UnknownModelError
 
 __all__ = ["FleetEngine", "FleetStats", "UnknownModelError"]
@@ -40,6 +51,14 @@ class FleetStats:
     n_models: int            # registered in the fleet
     n_hot: int               # warm backends right now
     n_retired: int           # backends drained away (swaps + LRU evictions)
+    #: fleet-wide resilience counters (sums across hot + retired backends)
+    n_shed: int = 0
+    n_deadline_expired: int = 0
+    n_worker_restarts: int = 0
+    #: model_id -> {backend: closed|open|half_open} for each hot backend
+    breaker_state: dict = dataclasses.field(default_factory=dict)
+    #: model_id -> the backend that served its most recent batch
+    active_backend: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return {
@@ -48,6 +67,11 @@ class FleetStats:
             "n_models": self.n_models,
             "n_hot": self.n_hot,
             "n_retired": self.n_retired,
+            "n_shed": self.n_shed,
+            "n_deadline_expired": self.n_deadline_expired,
+            "n_worker_restarts": self.n_worker_restarts,
+            "breaker_state": self.breaker_state,
+            "active_backend": self.active_backend,
         }
 
 
@@ -70,6 +94,8 @@ class FleetEngine:
         max_hot: int = 8,
         max_batch: int = 256,
         max_wait_ms: float = 2.0,
+        policy=None,
+        faults=None,
     ):
         if max_hot < 1:
             raise ValueError("max_hot must be >= 1")
@@ -78,6 +104,8 @@ class FleetEngine:
         self.max_hot = max_hot
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
+        self.policy = policy
+        self._faults = faults
         self._hot: "collections.OrderedDict[str, _HotBackend]" = (
             collections.OrderedDict()
         )
@@ -137,6 +165,11 @@ class FleetEngine:
 
         t = threading.Thread(target=_stop, name="fleet-retire", daemon=True)
         with self._lock:
+            # prune finished drains so a long-lived fleet with frequent
+            # swaps/evictions doesn't accumulate dead Thread objects forever
+            self._retire_threads = [
+                x for x in self._retire_threads if x.is_alive()
+            ]
             self._retire_threads.append(t)
         t.start()
 
@@ -149,11 +182,26 @@ class FleetEngine:
                 return hot.engine
             # cold model, or the registry hot-swapped it: build the new
             # version's backend; the old one drains in the background
+            from repro.api.backends import resolve_backend
+
+            primary = resolve_backend(
+                self.backend, compressed=entry.model.is_compressed
+            ).name
+            fallbacks = (
+                fallback_chain(entry.model, primary)
+                if self.policy is not None and self.policy.fallback
+                else ()
+            )
             engine = MicroBatchEngine(
                 entry.model.predictor(self.backend),
                 int(entry.model.forest.n_features),
                 max_batch=self.max_batch,
                 max_wait_ms=self.max_wait_ms,
+                policy=self.policy,
+                fallbacks=fallbacks,
+                backend_name=primary,
+                faults=self._faults,
+                fault_tag=model_id,
             )
             if self._started:
                 engine.start()
@@ -202,10 +250,16 @@ class FleetEngine:
                 mid: hot.engine.stats() for mid, hot in self._hot.items()
             }
             retired = list(self._retired_stats)
+        everything = list(per_model.values()) + retired
         return FleetStats(
             per_model=per_model,
-            fleet=EngineStats.merge(list(per_model.values()) + retired),
+            fleet=EngineStats.merge(everything),
             n_models=len(self.registry),
             n_hot=len(per_model),
             n_retired=len(retired),
+            n_shed=sum(s.n_shed for s in everything),
+            n_deadline_expired=sum(s.n_deadline_expired for s in everything),
+            n_worker_restarts=sum(s.n_worker_restarts for s in everything),
+            breaker_state={k: v.breaker_state for k, v in per_model.items()},
+            active_backend={k: v.active_backend for k, v in per_model.items()},
         )

@@ -82,14 +82,25 @@ class ModelEntry:
 class ModelRegistry:
     """Hosts many verified ``.toad`` models behind stable model ids."""
 
-    def __init__(self, pool: TablePool | None = None, verify: bool = True):
+    def __init__(
+        self,
+        pool: TablePool | None = None,
+        verify: bool = True,
+        faults=None,
+    ):
         self.pool = pool if pool is not None else TablePool()
         self.verify = verify
+        self._faults = faults  # test-only FaultPlan hook ("admit" point)
         self._entries: dict[str, ModelEntry] = {}
         self._lock = threading.RLock()
 
     # ------------------------------------------------------------- admission
     def _admit(self, model_id: str, path: str, version: int) -> ModelEntry:
+        if self._faults is not None:
+            # the injected mid-swap load error: fires before anything is
+            # loaded or interned, so a failed swap() leaves the old entry
+            # serving and the table pool untouched
+            self._faults.fire("admit", model=model_id)
         loaded = load_checked(path, verify=self.verify)
         model = loaded.model
         if not model.is_compressed:
@@ -164,13 +175,14 @@ class ModelRegistry:
         directory: str,
         pool: TablePool | None = None,
         verify: bool = True,
+        faults=None,
     ) -> "ModelRegistry":
         """Build a registry from every ``*.toad`` / ``*.npz`` artifact in a
         directory — model_id is the file stem.  Any artifact that fails
         admission aborts the whole fleet build (:class:`ArtifactError`),
         naming *every* offending file — a rollout fixes all of them in one
         round trip, not one per launch attempt."""
-        reg = cls(pool=pool, verify=verify)
+        reg = cls(pool=pool, verify=verify, faults=faults)
         paths = sorted(
             glob.glob(os.path.join(directory, "*.toad"))
             + glob.glob(os.path.join(directory, "*.npz"))

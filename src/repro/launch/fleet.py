@@ -70,8 +70,10 @@ def serve_fleet(args) -> dict:
     either print the planned manifest (``--dry-run``) or serve routed
     traffic with per-model parity checks (and optional live ``--swap``)."""
     from repro.api.artifact import ArtifactError
+    from repro.api.resilience import DeadlineExceeded, Overloaded, resolve_policy
     from repro.fleet import FleetEngine, ModelRegistry
 
+    policy = resolve_policy(args)
     t0 = time.time()
     try:
         registry = ModelRegistry.from_dir(args.models)
@@ -101,6 +103,7 @@ def serve_fleet(args) -> dict:
         max_hot=getattr(args, "max_hot", 8),
         max_batch=args.max_batch,
         max_wait_ms=args.max_wait_ms,
+        policy=policy,
     )
 
     ids = registry.ids()
@@ -122,7 +125,14 @@ def serve_fleet(args) -> dict:
         for i, mid in enumerate(plan):
             futs.append((mid, i, engine.submit(mid, queries[mid][i])))
         for mid, i, fut in futs:
-            got = fut.result()
+            try:
+                got = fut.result()
+            except (Overloaded, DeadlineExceeded):
+                # typed, expected outcomes under a resilience policy —
+                # parity is checked on whatever completed
+                if policy is None:
+                    raise
+                continue
             ref = registry.get(mid).model.predict(
                 queries[mid][i : i + 1], backend="reference"
             )[0]
@@ -158,6 +168,10 @@ def serve_fleet(args) -> dict:
             print(f"hot-swapped {mid!r}: v{before} -> v{entry.version} "
                   f"(post-swap parity {err:.2e})")
 
+        # breaker/active views are per *hot* backend: capture before stop()
+        # retires them all
+        live = engine.stats()
+
     stats = engine.stats()
     n_served = stats.fleet.n_requests
     max_err = max(errs) if errs else 0.0
@@ -169,6 +183,11 @@ def serve_fleet(args) -> dict:
         f"{stats.n_retired} retired backend(s)"
     )
     print(f"parity vs per-model reference: max|Δ| = {max_err:.2e}")
+    if policy is not None:
+        print(f"resilience: shed={stats.n_shed} "
+              f"deadline_expired={stats.n_deadline_expired} "
+              f"worker_restarts={stats.n_worker_restarts} "
+              f"breaker={live.breaker_state} active={live.active_backend}")
     report = registry.memory_report()
     print(
         f"residency: {report['standalone_total_bytes']:.0f} B standalone -> "
@@ -201,8 +220,11 @@ def add_fleet_args(ap: argparse.ArgumentParser) -> None:
 
 
 def main():
+    from repro.api.resilience import add_resilience_args
+
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     add_fleet_args(ap)
+    add_resilience_args(ap)
     ap.add_argument("--backend", default="auto",
                     help="predictor backend: auto|reference|packed|pallas")
     ap.add_argument("--requests", type=int, default=2048)

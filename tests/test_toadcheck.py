@@ -413,6 +413,32 @@ def test_lint_backend_parity_test_required(tmp_path):
     assert "orphan" in diags[0].message
 
 
+def test_lint_serving_queue_and_bare_except(tmp_path):
+    code = (
+        "import queue\n"
+        "q1 = queue.Queue()\n"                 # unbounded: flagged
+        "q2 = queue.Queue(maxsize=8)\n"        # bounded: fine
+        "q3 = queue.Queue(0)\n"                # explicit positional: fine
+        "def f():\n"
+        "    try:\n"
+        "        pass\n"
+        "    except:\n"                        # bare: flagged
+        "        pass\n"
+        "    try:\n"
+        "        pass\n"
+        "    except Exception:\n"              # typed: fine
+        "        pass\n")
+    d = tmp_path / "fleet"
+    d.mkdir()
+    f = d / "mod.py"
+    f.write_text(code)
+    diags = lint_paths([str(f)])
+    assert _codes(diags) == ["TOAD207"] and len(diags) == 2
+    assert {d_.line for d_ in diags} == {2, 8}
+    # same code outside the serving layer is exempt
+    assert _lint(tmp_path, code) == []
+
+
 def test_lint_src_is_clean_under_baseline():
     """The whole source tree lints clean modulo the justified baseline —
     the same invariant the CI static-analysis job enforces."""
