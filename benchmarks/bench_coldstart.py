@@ -1,0 +1,274 @@
+"""Cold-start-to-first-prediction: classic .toad load vs .toadpack streaming.
+
+The streaming container exists for exactly one latency: how long a freshly
+started server takes to answer its *first* prediction.  The classic path
+pays np.load + structural verify + full decode + the eval-fingerprint
+probe (a jit trace) before any query; the streaming path parses the
+manifest + header tables, decodes one ``TREE_BLOCK``-tree block and
+answers with a partial boosted sum (``repro.stream.ProgressiveScorer``) —
+pure numpy, zero compiles.
+
+Two scenarios, mirroring the rollout story:
+
+  * ``single``  — one model, cold open -> first prediction, p50 over reps.
+  * ``fleet``   — N models admitted sequentially (one process, one rollout
+    clock): model *i*'s time-to-first-prediction includes everything
+    admitted before it, so the p50 across models is what a mid-rollout
+    tenant actually waits.
+
+Writes ``BENCH_coldstart.json`` at the repo root (committed, the next PR's
+regression baseline).  ``--check`` fails on a >2x regression vs the
+committed baseline *and* — machine-independently, in-run — whenever the
+streaming fleet p50 is not strictly below the classic one.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_coldstart.py --smoke
+    PYTHONPATH=src python benchmarks/bench_coldstart.py --smoke --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
+
+import numpy as np
+
+CHECK_FACTOR = 2.0
+CHECK_KEYS = [
+    ("BENCH_coldstart.json", ("fleet", "streaming_p50_ms")),
+    ("BENCH_coldstart.json", ("single", "streaming_p50_ms")),
+]
+#: in-run, machine-independent: streaming must beat classic on both
+#: scenarios (strictly — this is the subsystem's reason to exist)
+SPEEDUP_KEYS = [
+    ("single", "speedup_classic_over_streaming"),
+    ("fleet", "speedup_classic_over_streaming"),
+]
+
+N_FLEET = 3
+
+
+def _build_fleet(directory, n_models, smoke, verbose=True):
+    """Train + compress ``n_models`` distinct models; save both formats.
+
+    Returns ``[(toad_path, pack_path, query_row), ...]``.  Training also
+    warms the jax runtime, so the timed sections below measure artifact
+    cold-start, not interpreter/jax process start.
+    """
+    from repro.api import CompressionSpec, ToadModel, save_artifact, save_streaming
+
+    rounds = 16 if smoke else 48
+    depth = 3 if smoke else 4
+    specs = [
+        CompressionSpec.codebook_full(6, 4),
+        CompressionSpec.codebook_full(6, 2),
+        CompressionSpec.thr_codebook(6),
+    ]
+    out = []
+    for i in range(n_models):
+        rng = np.random.default_rng(100 + i)
+        X = rng.standard_normal((800, 6)).astype(np.float32)
+        y = (X[:, 0] + X[:, 1] ** 2 + 0.1 * i > 0.7).astype(np.int32)
+        m = ToadModel(task="binary", n_bins=32, n_rounds=rounds, max_depth=depth)
+        m.fit(X, y)
+        m = m.compress(specs[i % len(specs)])
+        toad = os.path.join(directory, f"tenant_{i}.toad")
+        pack = os.path.join(directory, f"tenant_{i}.toadpack")
+        save_artifact(m, toad)
+        save_streaming(m, pack)
+        out.append((toad, pack, X[:1]))
+    if verbose:
+        print(f"[build] {n_models} model(s), {rounds} trees each", flush=True)
+    return out
+
+
+def _classic_first_prediction(toad_path, q):
+    """Cold open a classic bundle and return its first (1, C) answer."""
+    from repro.api.artifact import load_checked
+
+    loaded = load_checked(toad_path)
+    return np.asarray(loaded.model.predict(q, backend="reference"))
+
+
+def _streaming_first_prediction(pack_path, q):
+    """Cold open a pack, feed one block, answer with the partial sum."""
+    from repro.stream import open_streaming
+
+    sm = open_streaming(pack_path)
+    scorer = sm.scorer()
+    scorer.feed_next()
+    return scorer.predict(q).scores
+
+
+def _rollout(fleet, first_prediction, which):
+    """One sequential admission pass; per-model ms from the rollout start."""
+    ttfp = []
+    t0 = time.perf_counter()
+    for toad, pack, q in fleet:
+        first_prediction(toad if which == "classic" else pack, q)
+        ttfp.append((time.perf_counter() - t0) * 1e3)
+    return ttfp
+
+
+def bench_coldstart(fleet, reps, verbose=True):
+    """p50 cold-start-to-first-prediction, classic vs streaming."""
+    single: dict[str, list] = {"classic": [], "streaming": []}
+    fleet_ttfp: dict[str, list] = {"classic": [], "streaming": []}
+    for _ in range(reps):
+        # single model: the first fleet entry, opened cold each rep
+        toad, pack, q = fleet[0]
+        t0 = time.perf_counter()
+        _classic_first_prediction(toad, q)
+        single["classic"].append((time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        _streaming_first_prediction(pack, q)
+        single["streaming"].append((time.perf_counter() - t0) * 1e3)
+        # fleet rollout: every model's ttfp from the rollout clock
+        fleet_ttfp["classic"].extend(
+            _rollout(fleet, _classic_first_prediction, "classic"))
+        fleet_ttfp["streaming"].extend(
+            _rollout(fleet, _streaming_first_prediction, "streaming"))
+
+    def p50(xs):
+        return float(np.percentile(xs, 50))
+
+    out = {
+        "single": {
+            "classic_p50_ms": p50(single["classic"]),
+            "streaming_p50_ms": p50(single["streaming"]),
+        },
+        "fleet": {
+            "n_models": len(fleet),
+            "classic_p50_ms": p50(fleet_ttfp["classic"]),
+            "streaming_p50_ms": p50(fleet_ttfp["streaming"]),
+            "classic_last_model_ms": float(np.median(
+                fleet_ttfp["classic"][len(fleet) - 1::len(fleet)])),
+            "streaming_last_model_ms": float(np.median(
+                fleet_ttfp["streaming"][len(fleet) - 1::len(fleet)])),
+        },
+    }
+    for scope in ("single", "fleet"):
+        c, s = out[scope]["classic_p50_ms"], out[scope]["streaming_p50_ms"]
+        out[scope]["speedup_classic_over_streaming"] = c / s if s > 0 else 0.0
+    if verbose:
+        for scope in ("single", "fleet"):
+            row = out[scope]
+            print(
+                f"[coldstart {scope}] classic {row['classic_p50_ms']:.1f}ms  "
+                f"streaming {row['streaming_p50_ms']:.1f}ms  "
+                f"-> {row['speedup_classic_over_streaming']:.1f}x",
+                flush=True,
+            )
+    return out
+
+
+def _load_baseline(name):
+    path = os.path.join(ROOT, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _write(name, payload):
+    with open(os.path.join(ROOT, name), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+        f.write("\n")
+
+
+def _dig(payload, path):
+    for k in path:
+        payload = payload[k]
+    return payload
+
+
+def run(smoke=True, check=False, verbose=True):
+    import jax
+
+    reps = 3 if smoke else 5
+    baselines = {name: _load_baseline(name) for name, _ in CHECK_KEYS}
+    with tempfile.TemporaryDirectory() as d:
+        fleet = _build_fleet(d, N_FLEET, smoke, verbose=verbose)
+        results = bench_coldstart(fleet, reps, verbose=verbose)
+    payload = {
+        "meta": {
+            "smoke": smoke,
+            "reps": reps,
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+        },
+        **results,
+    }
+    _write("BENCH_coldstart.json", payload)
+
+    failures = []
+    baseline_compared = 0
+    for name, path in CHECK_KEYS:
+        base = baselines.get(name)
+        if base is None:
+            print(f"[check] {name}: no committed baseline, skipping", flush=True)
+            continue
+        if base.get("meta", {}).get("smoke") != smoke:
+            print(f"[check] {name}: baseline is a different size "
+                  f"(smoke={base.get('meta', {}).get('smoke')}), skipping",
+                  flush=True)
+            continue
+        try:
+            old_v = float(_dig(base, path))
+        except (KeyError, TypeError):
+            print(f"[check] {name}:{'.'.join(path)}: baseline predates this "
+                  "key, skipping", flush=True)
+            continue
+        new_v = float(_dig(payload, path))
+        baseline_compared += 1
+        ratio = new_v / old_v if old_v > 0 else 1.0
+        status = "FAIL" if ratio > CHECK_FACTOR else "ok"
+        if verbose or status == "FAIL":
+            print(f"[check] {name}:{'.'.join(path)}  {old_v:.3f} -> "
+                  f"{new_v:.3f} ({ratio:.2f}x)  {status}", flush=True)
+        if status == "FAIL":
+            failures.append((name, path, ratio))
+
+    # machine-independent: streaming must be strictly faster than classic
+    for path in SPEEDUP_KEYS:
+        val = float(_dig(payload, path))
+        status = "FAIL" if val <= 1.0 else "ok"
+        if verbose or status == "FAIL":
+            print(f"[check] {'.'.join(path)}  {val:.2f}x "
+                  f"(must be > 1.00)  {status}", flush=True)
+        if status == "FAIL":
+            failures.append(("BENCH_coldstart.json", path, val))
+
+    if check and failures:
+        print(f"coldstart gate: {len(failures)} metric(s) failed "
+              f"(>{CHECK_FACTOR}x vs baseline, or streaming not strictly "
+              f"faster than classic)", flush=True)
+        return 1
+    if check and baseline_compared == 0 and all(
+            baselines.get(n) is not None for n, _ in CHECK_KEYS):
+        print("coldstart gate: no baseline metric was comparable — commit a "
+              "BENCH_coldstart.json produced by a --smoke run", flush=True)
+        return 1
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on >2x regression vs the committed "
+                         "BENCH_coldstart.json or streaming >= classic")
+    args = ap.parse_args()
+    sys.exit(run(smoke=args.smoke, check=args.check))
+
+
+if __name__ == "__main__":
+    main()

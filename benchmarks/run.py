@@ -66,6 +66,18 @@ def main() -> None:
 
     bench("serve_gbdt", serve_bench)
 
+    def coldstart_bench():
+        # classic .toad load vs .toadpack progressive cold-start
+        import json as _json
+
+        from benchmarks import bench_coldstart
+
+        bench_coldstart.run(smoke=not args.full, check=False, verbose=False)
+        with open("BENCH_coldstart.json") as f:
+            return _json.load(f)
+
+    bench("coldstart", coldstart_bench)
+
     # trend checks + headline numbers
     print("\n=== summary (name,us_per_call,derived) ===")
     for name, dt, out in summary:
@@ -91,6 +103,10 @@ def main() -> None:
         elif name == "serve_gbdt" and out:
             derived = (f"req_per_s={out['req_per_s']:.0f} "
                        f"p95_ms={out['latency_p95_ms']:.2f}")
+        elif name == "coldstart" and out:
+            derived = (
+                f"fleet_streaming_p50={out['fleet']['streaming_p50_ms']:.1f}ms "
+                f"speedup={out['fleet']['speedup_classic_over_streaming']:.0f}x")
         elif name == "roofline" and out:
             ok = [r for r in out if r.get("status") == "OK" and r.get("mfu_floor") == r.get("mfu_floor")]
             if ok:

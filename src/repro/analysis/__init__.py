@@ -26,6 +26,7 @@ from repro.analysis.verify import (
     verify_bundle,
     verify_fleet,
     verify_model,
+    verify_pack,
     verify_stream,
 )
 
@@ -43,5 +44,6 @@ __all__ = [
     "verify_bundle",
     "verify_fleet",
     "verify_model",
+    "verify_pack",
     "verify_stream",
 ]

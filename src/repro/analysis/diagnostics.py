@@ -82,6 +82,20 @@ CATALOG: dict[str, tuple[str, str]] = {
                        "and references inside their tables"),
     "TOAD108": (WARNING, "eval fingerprint missing from a v2+ bundle: "
                          "value-level drift cannot be detected at load"),
+    # ---- streaming container (.toadpack v4, verify_pack) ----------------
+    "TOAD110": (ERROR, "not a valid .toadpack container: magic, version and "
+                       "manifest must parse and carry the v4 required keys"),
+    "TOAD111": (ERROR, "payload digest mismatch: a header/block/fingerprint "
+                       "section does not match its manifest sha256 "
+                       "(corrupted or reordered payload)"),
+    "TOAD112": (ERROR, "block layout invalid: sections must tile the "
+                       "container contiguously and the per-block bit "
+                       "accounting must match the trees"),
+    "TOAD113": (ERROR, "tree_order is not a permutation of range(n_trees): "
+                       "progressive partial sums would drop or double-count "
+                       "trees"),
+    "TOAD114": (ERROR, "stream header and manifest disagree: regenerate the "
+                       "pack with save_streaming"),
     # ---- code lint (lint.py) --------------------------------------------
     "TOAD201": (ERROR, "count/histogram tensor cast to bf16/f16: counts and "
                        "accumulators must stay fp32 (PR-3 contract)"),

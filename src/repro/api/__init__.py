@@ -9,6 +9,7 @@ from repro.api.artifact import (
     load_artifact,
     load_checked,
     save_artifact,
+    save_streaming,
 )
 from repro.api.backends import (
     PredictorBackend,
@@ -54,6 +55,7 @@ __all__ = [
     "load_artifact",
     "load_checked",
     "save_artifact",
+    "save_streaming",
     "CompressionReport",
     "CompressionSpec",
     "CompressionStage",

@@ -163,6 +163,38 @@ def save_artifact(model, path: str, verify: bool = True) -> str:
     return path
 
 
+def save_streaming(model, path: str, verify: bool = True, **kwargs) -> str:
+    """Persist a fitted model as a ``.toadpack`` v4 streaming container.
+
+    The block-aligned layout ``repro.stream.format`` documents: manifest,
+    then the stream header (feature map + threshold/leaf codebooks), then
+    sha256-checksummed tree blocks ordered most-informative-first, then the
+    eval fingerprint — so a cold-starting server answers after the first
+    block instead of after the full bundle (``repro.stream.open_streaming``
+    / :class:`~repro.stream.progressive.ProgressiveScorer`).
+
+    ``kwargs`` pass through to :func:`repro.stream.format.write_pack`
+    (``tree_block``, ``tree_order``).  With ``verify=True`` (default) the
+    written container is structurally re-verified (``verify_pack``,
+    TOAD11x + the reassembled-stream TOAD00x walk) before the path is
+    returned, mirroring :func:`save_artifact`'s producer-side guarantee.
+    """
+    from repro.stream.format import write_pack  # lazy: import cycle
+
+    model._require_fitted()
+    write_pack(model, path, **kwargs)
+    if verify:
+        from repro.analysis.verify import verify_pack
+
+        bad = errors(verify_pack(path, deep=True))
+        if bad:
+            raise ArtifactError(
+                f"{path}: refusing to keep a structurally invalid streaming "
+                f"container:\n" + format_diagnostics(bad)
+            )
+    return path
+
+
 def load_artifact(path: str, verify: bool = True, _structural: bool = True):
     """Load a .toad bundle back into a :class:`ToadModel`.
 

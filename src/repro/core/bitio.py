@@ -133,6 +133,45 @@ class BitReader:
         self._pos += width * count
         return out
 
+    def seek(self, bit_pos: int) -> None:
+        """Reposition the cursor to an absolute bit offset.
+
+        Bounds-checked against the declared stream length, so a seek can
+        never place the cursor where a subsequent read would index past the
+        backing buffer.  Seeking exactly to ``n_bits`` is allowed (the
+        "end of stream" position, mirroring ``remaining == 0``).
+        """
+        bit_pos = int(bit_pos)
+        if bit_pos < 0 or bit_pos > self._n_bits:
+            raise StreamBoundsError(
+                f"seek to bit {bit_pos} outside the {self._n_bits}-bit "
+                f"stream", pos=bit_pos, width=0,
+            )
+        self._pos = bit_pos
+
+    def subreader(self, start_bit: int, n_bits: int) -> "BitReader":
+        """A bounded reader over bits ``[start_bit, start_bit + n_bits)``.
+
+        Shares the backing buffer (no copy): the view's cursor starts at
+        ``start_bit`` and its declared length ends the window, so reads are
+        bounds-checked against the window, not the whole stream.  ``pos``
+        on the view reports *absolute* stream offsets, which keeps
+        diagnostics from per-block decoders anchored in the parent stream.
+        """
+        start_bit = int(start_bit)
+        n_bits = int(n_bits)
+        if n_bits < 0:
+            raise ValueError("n_bits must be >= 0")
+        if start_bit < 0 or start_bit + n_bits > self._n_bits:
+            raise StreamBoundsError(
+                f"subreader [{start_bit}, {start_bit + n_bits}) outside the "
+                f"{self._n_bits}-bit stream", pos=start_bit, width=n_bits,
+            )
+        sub = BitReader(self._data, start_bit + n_bits)
+        sub._pos = start_bit
+        sub._unpacked = self._unpacked  # share the lazy bit cache if built
+        return sub
+
     def read_f32(self) -> float:
         return float(np.uint32(self.read(32)).view(np.float32))
 

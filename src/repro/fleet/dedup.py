@@ -138,6 +138,30 @@ def intern_model_tables(model, pool: TablePool):
     return interned, cb_table
 
 
+def intern_streaming_tables(model, pool: TablePool):
+    """Intern a streaming (``ProgressiveModel``) entry's header tables.
+
+    A ``.toadpack`` fronts its threshold/leaf tables in the stream header,
+    so they are fully resident the moment the model is admitted — before
+    any tree block has landed — and dedup against classic entries works
+    because the header tables are byte-identical to the packed serving
+    form's (both decode the same stream sections).  Same return shape as
+    :func:`intern_model_tables`.
+    """
+    interned = InternedTables(arrays=[])
+    header = model.header
+    for name in ("thr_table", "leaf_values"):
+        shared = pool.intern(getattr(header, name))
+        interned.arrays.append(shared)
+        setattr(header, name, shared)
+    cb_table = None
+    if header.cb_table is not None:
+        cb_table = pool.intern(header.cb_table)
+        interned.arrays.append(cb_table)
+        header.cb_table = cb_table
+    return interned, cb_table
+
+
 def fleet_memory_report(registry) -> dict:
     """Per-model vs shared resident-byte accounting for a whole fleet.
 
@@ -157,20 +181,37 @@ def fleet_memory_report(registry) -> dict:
     standalone_total = 0.0
     for entry in registry.entries():
         model = entry.model
-        resident = packed_resident_bytes(model.packed)
         cb_bytes = (
             float(entry.thr_codebook_table.nbytes)
             if entry.thr_codebook_table is not None
             else 0.0
         )
-        standalone = resident["total_bytes"] + cb_bytes
+        if getattr(model, "is_streaming_model", False):
+            # streaming entries account their decoded blocks + header
+            # tables; on-the-wire sections come from the pack manifest
+            resident = model.resident_bytes()
+            man = model.manifest
+            sections = {
+                "header_bytes": float(man["header"]["n_bytes"]),
+                "tree_blocks_bytes": float(
+                    sum(b["n_bytes"] for b in man["blocks"])),
+                "fingerprint_bytes": float(man["fingerprint"]["n_bytes"]),
+            }
+            sections["total_bytes"] = float(sum(sections.values()))
+            standalone = resident["total_bytes"]
+        else:
+            resident = packed_resident_bytes(model.packed)
+            cb_bits = (
+                model.encoded.thr_codebook_bits
+                if model.encoded is not None else 0
+            )
+            sections = stream_sections(model.forest,
+                                       thr_codebook_bits=cb_bits)
+            standalone = resident["total_bytes"] + cb_bytes
         shared = sum(
             float(np.asarray(a).nbytes)
             for a in entry.interned.arrays
             if pool.refs(a) > 1
-        )
-        cb_bits = (
-            model.encoded.thr_codebook_bits if model.encoded is not None else 0
         )
         models[entry.model_id] = {
             "version": entry.version,
@@ -179,7 +220,7 @@ def fleet_memory_report(registry) -> dict:
             "shared_bytes": float(shared),
             "thr_codebook_table_bytes": cb_bytes,
             "resident": resident,
-            "sections": stream_sections(model.forest, thr_codebook_bits=cb_bits),
+            "sections": sections,
         }
         standalone_total += standalone
     pool_stats = pool.stats()

@@ -59,6 +59,9 @@ class FleetStats:
     breaker_state: dict = dataclasses.field(default_factory=dict)
     #: model_id -> the backend that served its most recent batch
     active_backend: dict = dataclasses.field(default_factory=dict)
+    #: model_id -> ProgressiveScorer stats (streaming entries only):
+    #: time_to_first_prediction_ms, blocks_evaluated, score_is_final, ...
+    streaming: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return {
@@ -72,6 +75,7 @@ class FleetStats:
             "n_worker_restarts": self.n_worker_restarts,
             "breaker_state": self.breaker_state,
             "active_backend": self.active_backend,
+            "streaming": self.streaming,
         }
 
 
@@ -96,6 +100,7 @@ class FleetEngine:
         max_wait_ms: float = 2.0,
         policy=None,
         faults=None,
+        streaming: bool = False,
     ):
         if max_hot < 1:
             raise ValueError("max_hot must be >= 1")
@@ -105,6 +110,10 @@ class FleetEngine:
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
         self.policy = policy
+        #: serve partial sums from streaming entries (opt-in); with the
+        #: default False a .toadpack entry waits for its last tree block
+        #: before its backend is built, so every score is final
+        self.streaming = streaming
         self._faults = faults
         self._hot: "collections.OrderedDict[str, _HotBackend]" = (
             collections.OrderedDict()
@@ -175,6 +184,10 @@ class FleetEngine:
 
     def _backend_for(self, model_id: str) -> MicroBatchEngine:
         entry = self.registry.get(model_id)  # raises UnknownModelError
+        if entry.is_streaming and not self.streaming:
+            # progressive serving was not opted into: block until the
+            # entry's last tree block has landed so every score is final
+            entry.model.wait_complete()
         with self._lock:
             hot = self._hot.get(model_id)
             if hot is not None and hot.version == entry.version:
@@ -243,6 +256,21 @@ class FleetEngine:
         """The serving version currently routed to for ``model_id``."""
         return self.registry.get(model_id).version
 
+    def wait_complete(self, *model_ids: str, timeout: float | None = None
+                      ) -> bool:
+        """Block until the given (default: all) streaming entries are final.
+
+        No-op for classic entries.  Returns True iff every addressed
+        streaming entry has consumed its last tree block — after which
+        progressive responses equal the classic path's predictions.
+        """
+        ok = True
+        for mid in model_ids or self.registry.ids():
+            entry = self.registry.get(mid)
+            if entry.is_streaming:
+                ok &= entry.model.wait_complete(timeout)
+        return ok
+
     # ----------------------------------------------------------------- stats
     def stats(self) -> FleetStats:
         with self._lock:
@@ -251,6 +279,11 @@ class FleetEngine:
             }
             retired = list(self._retired_stats)
         everything = list(per_model.values()) + retired
+        streaming = {
+            e.model_id: e.model.streaming_stats()
+            for e in self.registry.entries()
+            if e.is_streaming
+        }
         return FleetStats(
             per_model=per_model,
             fleet=EngineStats.merge(everything),
@@ -262,4 +295,5 @@ class FleetEngine:
             n_worker_restarts=sum(s.n_worker_restarts for s in everything),
             breaker_state={k: v.breaker_state for k, v in per_model.items()},
             active_backend={k: v.active_backend for k, v in per_model.items()},
+            streaming=streaming,
         )

@@ -7,6 +7,12 @@ artifact serves each ``model_id``.  Admission goes through
 bundle never enters a fleet; the negotiated ``.toad`` format version
 (1 legacy / 2 exact / 3 codebook-layout, stamped lowest-sufficient at save
 time) is recorded per entry, and mixed-version fleets serve side by side.
+``.toadpack`` v4 streaming containers admit through
+``repro.stream.open_streaming`` behind a
+:class:`~repro.stream.progressive.ProgressiveModel` — with
+``streaming=True`` the entry serves from its first tree block while the
+rest stream in; otherwise admission waits for every block (classic
+latency, same verification).
 
 Every admitted model's shareable tables are interned into the registry's
 :class:`~repro.fleet.dedup.TablePool`, so same-ladder models keep one
@@ -27,13 +33,22 @@ from __future__ import annotations
 
 import dataclasses
 import glob
+import logging
 import os
 import threading
+import time
 
 import numpy as np
 
 from repro.api.artifact import ArtifactError, load_checked
-from repro.fleet.dedup import InternedTables, TablePool, intern_model_tables
+from repro.fleet.dedup import (
+    InternedTables,
+    TablePool,
+    intern_model_tables,
+    intern_streaming_tables,
+)
+
+logger = logging.getLogger("repro.fleet.registry")
 
 
 class UnknownModelError(KeyError):
@@ -63,10 +78,15 @@ class ModelEntry:
     thr_codebook_table: np.ndarray | None
     interned: InternedTables
 
+    @property
+    def is_streaming(self) -> bool:
+        """True for ``.toadpack`` entries served progressively."""
+        return bool(getattr(self.model, "is_streaming_model", False))
+
     def describe(self) -> dict:
         """Manifest row for this entry (what --dry-run prints)."""
         meta = (self.model.artifact_meta or {}).get("manifest", {})
-        return {
+        row = {
             "version": self.version,
             "path": self.path,
             "format_version": self.format_version,
@@ -77,6 +97,9 @@ class ModelEntry:
             "encoded_stream_bytes": meta.get("encoded_stream_bytes"),
             "n_warnings": len(self.diagnostics),
         }
+        if self.is_streaming:
+            row["streaming"] = self.model.streaming_stats()
+        return row
 
 
 class ModelRegistry:
@@ -87,9 +110,11 @@ class ModelRegistry:
         pool: TablePool | None = None,
         verify: bool = True,
         faults=None,
+        streaming: bool = False,
     ):
         self.pool = pool if pool is not None else TablePool()
         self.verify = verify
+        self.streaming = streaming  # progressive .toadpack admission (opt-in)
         self._faults = faults  # test-only FaultPlan hook ("admit" point)
         self._entries: dict[str, ModelEntry] = {}
         self._lock = threading.RLock()
@@ -101,6 +126,23 @@ class ModelRegistry:
             # loaded or interned, so a failed swap() leaves the old entry
             # serving and the table pool untouched
             self._faults.fire("admit", model=model_id)
+        t0 = time.perf_counter()
+        from repro.stream.format import is_pack  # lazy: import cycle
+
+        if is_pack(path):
+            entry = self._admit_streaming(model_id, path, version)
+        else:
+            entry = self._admit_classic(model_id, path, version)
+        elapsed_ms = (time.perf_counter() - t0) * 1e3
+        logger.info(
+            "admitted %s v%d from %s (.toad format v%d%s) in %.1f ms",
+            model_id, version, os.path.basename(path), entry.format_version,
+            ", streaming" if entry.is_streaming else "", elapsed_ms,
+        )
+        return entry
+
+    def _admit_classic(self, model_id: str, path: str,
+                       version: int) -> ModelEntry:
         loaded = load_checked(path, verify=self.verify)
         model = loaded.model
         if not model.is_compressed:
@@ -120,6 +162,35 @@ class ModelRegistry:
                 else 0
             ),
             diagnostics=loaded.diagnostics,
+            thr_codebook_table=cb_table,
+            interned=interned,
+        )
+
+    def _admit_streaming(self, model_id: str, path: str,
+                         version: int) -> ModelEntry:
+        """Admit a ``.toadpack`` behind a progressive scorer.
+
+        With ``streaming=True`` the model serves from its first tree block
+        and the rest stream in from a background feeder; otherwise every
+        block is consumed before this returns (classic admission latency,
+        new container).  Either way the container's manifest + header are
+        verified up front and each block's sha256 is enforced as it lands.
+        """
+        from repro.stream.progressive import ProgressiveModel
+        from repro.stream.reader import open_streaming
+
+        sm = open_streaming(path, verify=self.verify)
+        model = ProgressiveModel(sm, background=self.streaming)
+        interned, cb_table = intern_streaming_tables(model, self.pool)
+        return ModelEntry(
+            model_id=model_id,
+            version=version,
+            path=path,
+            model=model,
+            format_version=sm.format_version,
+            spec_name=model.spec.name if model.spec is not None else None,
+            thr_codebook_bits=model.thr_codebook_bits,
+            diagnostics=sm.diagnostics,
             thr_codebook_table=cb_table,
             interned=interned,
         )
@@ -176,20 +247,31 @@ class ModelRegistry:
         pool: TablePool | None = None,
         verify: bool = True,
         faults=None,
+        streaming: bool = False,
     ) -> "ModelRegistry":
-        """Build a registry from every ``*.toad`` / ``*.npz`` artifact in a
-        directory — model_id is the file stem.  Any artifact that fails
-        admission aborts the whole fleet build (:class:`ArtifactError`),
-        naming *every* offending file — a rollout fixes all of them in one
-        round trip, not one per launch attempt."""
-        reg = cls(pool=pool, verify=verify, faults=faults)
+        """Build a registry from every ``*.toad`` / ``*.npz`` /
+        ``*.toadpack`` artifact in a directory — model_id is the file stem.
+        Any artifact that fails admission aborts the whole fleet build
+        (:class:`ArtifactError`), naming *every* offending file — a rollout
+        fixes all of them in one round trip, not one per launch attempt.
+
+        Admission order is deterministic: sorted by file *name* (not the
+        full path), so the same artifact set admits in the same order from
+        any mount point and the admission log/serving versions are
+        reproducible across hosts.  Each admission is logged with its
+        elapsed milliseconds on the ``repro.fleet.registry`` logger.
+        """
+        reg = cls(pool=pool, verify=verify, faults=faults,
+                  streaming=streaming)
         paths = sorted(
             glob.glob(os.path.join(directory, "*.toad"))
             + glob.glob(os.path.join(directory, "*.npz"))
+            + glob.glob(os.path.join(directory, "*.toadpack")),
+            key=os.path.basename,
         )
         if not paths:
             raise ArtifactError(
-                f"{directory}: no .toad/.npz artifacts found"
+                f"{directory}: no .toad/.npz/.toadpack artifacts found"
             )
         if verify:
             from repro.analysis.diagnostics import errors, format_diagnostics

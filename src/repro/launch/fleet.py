@@ -13,6 +13,11 @@
     PYTHONPATH=src python -m repro.launch.fleet --models fleet_dir/ \
         --smoke --swap tenant_a=new_model.toad
 
+    # Progressive cold-start over .toadpack streaming containers: each
+    # model answers from its first tree block, the rest stream in:
+    PYTHONPATH=src python -m repro.launch.fleet --models fleet_dir/ \
+        --smoke --streaming
+
 Also reachable through the serving CLI's arch dispatch::
 
     PYTHONPATH=src python -m repro.launch.serve --arch toad-fleet \
@@ -38,12 +43,15 @@ import numpy as np
 
 def _probe_queries(model, n: int) -> np.ndarray:
     """(n, d) queries from the artifact's own eval-fingerprint probe set."""
-    from repro.core.pipeline import probe_inputs
-
     fp = (model.artifact_meta or {}).get("fingerprint") or {}
-    probe = probe_inputs(
-        model.forest, n=int(fp.get("n_probe", 32)), seed=int(fp.get("seed", 7))
-    )
+    n_probe, seed = int(fp.get("n_probe", 32)), int(fp.get("seed", 7))
+    if hasattr(model, "probe_inputs"):
+        # streaming entries synthesize the probe from their header tables
+        probe = model.probe_inputs(n=n_probe, seed=seed)
+    else:
+        from repro.core.pipeline import probe_inputs
+
+        probe = probe_inputs(model.forest, n=n_probe, seed=seed)
     reps = -(-n // len(probe))  # ceil
     return np.tile(probe, (reps, 1))[:n]
 
@@ -74,13 +82,14 @@ def serve_fleet(args) -> dict:
     from repro.fleet import FleetEngine, ModelRegistry
 
     policy = resolve_policy(args)
+    streaming = bool(getattr(args, "streaming", False))
     t0 = time.time()
     try:
-        registry = ModelRegistry.from_dir(args.models)
+        registry = ModelRegistry.from_dir(args.models, streaming=streaming)
     except ArtifactError as e:
         raise SystemExit(f"fleet admission refused: {e}")
     print(f"admitted {len(registry)} model(s) in {time.time() - t0:.2f}s "
-          f"(toadcheck-verified)")
+          f"(toadcheck-verified{', streaming' if streaming else ''})")
     _print_manifest(registry.manifest())
 
     if getattr(args, "dry_run", False):
@@ -104,9 +113,29 @@ def serve_fleet(args) -> dict:
         max_batch=args.max_batch,
         max_wait_ms=args.max_wait_ms,
         policy=policy,
+        streaming=streaming,
     )
 
     ids = registry.ids()
+    if streaming:
+        # first-wave partial predictions: answer every streaming model from
+        # whatever blocks have landed (no parity — scores may be partial),
+        # then wait for completion so the traffic run below checks final
+        # scores
+        for mid in ids:
+            entry = registry.get(mid)
+            if not entry.is_streaming:
+                continue
+            q = _probe_queries(entry.model, 1)
+            res = entry.model.scorer.predict(q)
+            st = entry.model.streaming_stats()
+            print(
+                f"  first-wave {mid}: blocks {res.blocks_evaluated}/"
+                f"{res.n_blocks} final={res.score_is_final} "
+                f"ttfp={st['time_to_first_prediction_ms']:.1f} ms"
+            )
+        engine.wait_complete()
+        print("all streaming entries complete; scores below are final")
     queries = {
         mid: _probe_queries(registry.get(mid).model, n_requests)
         for mid in ids
@@ -217,6 +246,10 @@ def add_fleet_args(ap: argparse.ArgumentParser) -> None:
                     metavar="MODEL_ID=PATH",
                     help="after the traffic run, hot-swap MODEL_ID to the "
                          "artifact at PATH and assert the new version serves")
+    ap.add_argument("--streaming", action="store_true",
+                    help="progressive cold-start: serve .toadpack entries "
+                         "from their first tree block while the rest stream "
+                         "in (see docs/streaming.md)")
 
 
 def main():

@@ -1,9 +1,10 @@
 """Property tests for the bit-level writer/reader."""
 
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.bitio import BitReader, BitWriter, bits_for
+from repro.core.bitio import BitReader, BitWriter, StreamBoundsError, bits_for
 
 
 @given(st.lists(st.tuples(st.integers(0, 2**32 - 1), st.integers(1, 32)), max_size=100))
@@ -49,3 +50,71 @@ def test_value_too_wide():
         raise AssertionError("should have raised")
     except ValueError:
         pass
+
+
+@given(st.lists(st.tuples(st.integers(0, 2**16 - 1), st.integers(1, 16)),
+                min_size=2, max_size=60),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_seek_rereads_bit_exact(fields, seed):
+    fields = [(v & ((1 << w) - 1), w) for v, w in fields]
+    w = BitWriter()
+    offsets = []
+    for v, width in fields:
+        offsets.append(w.n_bits)
+        w.write(v, width)
+    r = BitReader(w.getvalue(), w.n_bits)
+    # random re-read order: every field re-reads bit-exact after a seek
+    order = np.random.default_rng(seed).permutation(len(fields))
+    for i in order:
+        r.seek(offsets[i])
+        assert r.pos == offsets[i]
+        assert r.read(fields[i][1]) == fields[i][0]
+
+
+@given(st.lists(st.tuples(st.integers(0, 2**16 - 1), st.integers(1, 16)),
+                min_size=3, max_size=60),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_subreader_window_is_bit_exact_and_bounded(fields, seed):
+    fields = [(v & ((1 << w) - 1), w) for v, w in fields]
+    w = BitWriter()
+    offsets = []
+    for v, width in fields:
+        offsets.append(w.n_bits)
+        w.write(v, width)
+    r = BitReader(w.getvalue(), w.n_bits)
+    rng = np.random.default_rng(seed)
+    lo = int(rng.integers(0, len(fields) - 1))
+    hi = int(rng.integers(lo + 1, len(fields)))
+    start = offsets[lo]
+    n_bits = offsets[hi] - start + fields[hi][1]
+    sub = r.subreader(start, n_bits)
+    assert sub.pos == start  # absolute offsets, anchored in the parent
+    for v, width in fields[lo:hi + 1]:
+        assert sub.read(width) == v
+    assert sub.remaining == 0
+    with pytest.raises(StreamBoundsError):
+        sub.read(1)  # the window is a hard wall even if the parent goes on
+    assert r.pos == 0  # the parent cursor is untouched
+
+
+def test_seek_and_subreader_bounds():
+    w = BitWriter()
+    w.write(0b1011, 4)
+    r = BitReader(w.getvalue(), w.n_bits)
+    r.seek(4)  # end-of-stream position is legal
+    assert r.remaining == 0
+    with pytest.raises(StreamBoundsError):
+        r.seek(5)
+    with pytest.raises(StreamBoundsError):
+        r.seek(-1)
+    with pytest.raises(StreamBoundsError):
+        r.subreader(2, 3)  # [2, 5) overruns the 4-bit stream
+    with pytest.raises(ValueError):
+        r.subreader(0, -1)
+    sub = r.subreader(1, 2)
+    assert sub.read(2) == 0b01
+    # vectorized reads respect the same window
+    sub2 = r.subreader(0, 4)
+    np.testing.assert_array_equal(sub2.read_array(2, 2), [0b10, 0b11])

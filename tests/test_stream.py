@@ -1,0 +1,354 @@
+"""The streaming subsystem (``repro.stream``): .toadpack v4 round-trips,
+progressive anytime scoring, most-informative-first tree ordering, v1-v3
+fallback parity, TOAD11x refusals, streaming fleet admission, and the
+toadcheck CLI on packs."""
+
+import json
+import logging
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.api import ArtifactError, CompressionSpec, ToadModel, save_streaming
+from repro.api.artifact import load_checked
+from repro.analysis import errors, verify_pack
+from repro.fleet import FleetEngine, ModelRegistry
+from repro.stream import (
+    PACK_MAGIC,
+    TREE_BLOCK,
+    BlockReader,
+    ProgressiveModel,
+    ProgressiveScorer,
+    StreamingError,
+    open_streaming,
+    read_manifest,
+    tree_order_most_informative,
+    write_pack,
+)
+
+REPO = Path(__file__).resolve().parent.parent
+ATOL = 1e-5
+
+
+def _fit(task="binary", n_classes=0, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(400, 6)).astype(np.float32)
+    if task == "binary":
+        y = (X[:, 0] + X[:, 1] ** 2 > 0.7).astype(np.float32)
+    else:
+        y = np.digitize(X[:, 0], [-0.5, 0.5]).astype(np.float32)
+    m = ToadModel(task=task, n_classes=n_classes, n_bins=16,
+                  n_rounds=12, max_depth=3, learning_rate=0.3)
+    return m.fit(X, y), X
+
+
+@pytest.fixture(scope="module")
+def packs(tmp_path_factory):
+    """Binary + multiclass models saved as both .toad and .toadpack."""
+    root = tmp_path_factory.mktemp("stream")
+    out = {}
+    for task, n_classes in (("binary", 0), ("multiclass", 3)):
+        m, X = _fit(task, n_classes)
+        m = m.compress(spec=CompressionSpec.codebook_full(6, 4))
+        toad = str(root / f"{task}.toad")
+        pack = str(root / f"{task}.toadpack")
+        m.save(toad)
+        save_streaming(m, pack)
+        out[task] = (m, X, toad, pack)
+    return out
+
+
+# ------------------------------------------------------------- container
+def test_pack_is_magic_tagged_and_manifest_parses(packs):
+    _, _, _, pack = packs["binary"]
+    assert Path(pack).read_bytes()[:8] == PACK_MAGIC
+    man = read_manifest(pack)
+    assert man["format_version"] == 4
+    assert man["tree_block"] == TREE_BLOCK
+    assert man["n_blocks"] == len(man["blocks"])
+    # blocks tile the permuted stream contiguously
+    assert sum(b["n_trees"] for b in man["blocks"]) == man["n_trees"]
+
+
+def test_default_tree_order_is_most_informative_first(packs):
+    m, _, _, pack = packs["binary"]
+    man = read_manifest(pack)
+    expect = tree_order_most_informative(m.forest)
+    assert man["tree_order"] == [int(t) for t in expect]
+    assert sorted(man["tree_order"]) == list(range(man["n_trees"]))
+
+
+def test_verify_pack_deep_is_clean(packs):
+    for task in ("binary", "multiclass"):
+        _, _, _, pack = packs[task]
+        diags = verify_pack(pack, deep=True)
+        assert not errors(diags), [d.code for d in diags]
+
+
+@pytest.mark.parametrize("task", ["binary", "multiclass"])
+@pytest.mark.parametrize("backend", ["reference", "packed"])
+def test_progressive_converges_to_classic(packs, task, backend):
+    m, X, _, pack = packs[task]
+    sm = open_streaming(pack)
+    assert sm.is_streaming and sm.format_version == 4
+    scorer = sm.scorer(backend=backend)
+    seen_blocks = []
+    while scorer.feed_next():
+        res = scorer.predict(X[:64], backend=backend)
+        seen_blocks.append(res.blocks_evaluated)
+        assert res.scores.shape == (64, max(1, int(m.forest.n_ensembles)))
+        assert res.score_is_final == (res.blocks_evaluated == res.n_blocks)
+    assert seen_blocks == sorted(seen_blocks)  # monotone refinement
+    final = scorer.predict(X[:64], backend=backend)
+    assert final.score_is_final
+    ref = m.predict(X[:64], backend="reference")
+    np.testing.assert_allclose(final.scores, ref, rtol=ATOL, atol=ATOL)
+
+
+def test_any_permutation_converges(packs, tmp_path):
+    m, X, _, _ = packs["multiclass"]
+    rng = np.random.default_rng(3)
+    order = rng.permutation(int(m.forest.n_trees))
+    pack = str(tmp_path / "perm.toadpack")
+    write_pack(m, pack, tree_order=order)
+    sm = open_streaming(pack)
+    assert read_manifest(pack)["tree_order"] == [int(t) for t in order]
+    scorer = sm.scorer()
+    scorer.feed_all()
+    got = scorer.predict(X[:64]).scores
+    ref = m.predict(X[:64], backend="reference")
+    np.testing.assert_allclose(got, ref, rtol=ATOL, atol=ATOL)
+
+
+def test_first_block_answers_and_stats(packs):
+    _, X, _, pack = packs["binary"]
+    sm = open_streaming(pack)
+    scorer = sm.scorer()
+    scorer.feed_next()
+    res = scorer.predict(X[:8])
+    assert res.blocks_evaluated == 1
+    assert res.trees_evaluated == min(TREE_BLOCK, int(sm.n_trees))
+    assert not res.score_is_final or res.n_blocks == 1
+    st = scorer.stats()
+    assert st["time_to_first_prediction_ms"] is not None
+    assert st["blocks_evaluated"] == 1
+
+
+def test_streaming_model_full_predict_matches_classic(packs):
+    m, X, toad, pack = packs["binary"]
+    got = open_streaming(pack).predict(X[:64])
+    ref = load_checked(toad).model.predict(X[:64], backend="reference")
+    np.testing.assert_allclose(got, ref, rtol=ATOL, atol=ATOL)
+
+
+def test_scorer_rejects_classic_bundles(packs):
+    _, _, toad, _ = packs["binary"]
+    sm = open_streaming(toad)
+    assert not sm.is_streaming
+    with pytest.raises(ValueError):
+        ProgressiveScorer(sm)
+
+
+# -------------------------------------------------- v1-v3 fallback parity
+def test_v1_v2_v3_fallback_serves_identically(tmp_path):
+    import dataclasses
+
+    m, X = _fit("binary")
+    # v3 (threshold codebook) and v2 (exact) bundles
+    paths = {}
+    m = m.compress(spec=CompressionSpec.codebook_full(6, 4))
+    paths[3] = str(tmp_path / "v3.toad")
+    m.save(paths[3])
+    m2 = m.compress(spec=CompressionSpec.exact())
+    paths[2] = str(tmp_path / "v2.toad")
+    m2.save(paths[2])
+    # legacy v1: PR-2-era npz without format_version / spec / fingerprint
+    from repro.api.model import _FOREST_FIELDS
+
+    arrays = {f: np.asarray(getattr(m2.forest, f)) for f in _FOREST_FIELDS}
+    cfg = dataclasses.asdict(m2.config)
+    cfg.pop("hist_quant_bits")
+    meta = {"config": cfg, "n_bins": m2.n_bins,
+            "n_ensembles": m2.forest.n_ensembles, "compressed": True}
+    arrays["meta_json"] = np.frombuffer(json.dumps(meta).encode(), np.uint8)
+    arrays["toad_stream"] = m2.encoded.data
+    arrays["toad_stream_bits"] = np.asarray(m2.encoded.n_bits, np.int64)
+    paths[1] = str(tmp_path / "v1.npz")
+    with open(paths[1], "wb") as f:
+        np.savez_compressed(f, **arrays)
+
+    for version, path in paths.items():
+        sm = open_streaming(path)
+        assert not sm.is_streaming
+        assert sm.format_version == version
+        ref = load_checked(path).model.predict(X[:64], backend="reference")
+        for backend in ("reference", "packed"):
+            got = sm.predict(X[:64], backend=backend)
+            np.testing.assert_allclose(got, ref, rtol=ATOL, atol=ATOL,
+                                       err_msg=f"v{version}/{backend}")
+
+
+# --------------------------------------------------------- TOAD11x refusals
+def _corrupt_block(src, dst, block=1):
+    """Flip one payload byte inside tree block ``block``."""
+    man = read_manifest(src)
+    raw = bytearray(Path(src).read_bytes())
+    off = man["blocks"][block]["offset"]
+    raw[off] ^= 0xFF
+    Path(dst).write_bytes(bytes(raw))
+    return str(dst)
+
+
+def test_corrupted_block_refused_with_TOAD111(packs, tmp_path):
+    _, X, _, pack = packs["binary"]
+    bad = _corrupt_block(pack, tmp_path / "bad.toadpack")
+    diags = verify_pack(bad, deep=True)
+    assert "TOAD111" in {d.code for d in errors(diags)}
+    # lazy path: admission (header-only) succeeds, the poisoned block is
+    # refused the moment the reader consumes it
+    sm = open_streaming(bad)
+    scorer = sm.scorer()
+    assert scorer.feed_next()  # block 0 is intact
+    with pytest.raises(StreamingError, match="TOAD111"):
+        scorer.feed_all()
+    reg = ModelRegistry()  # eager (non-background) admission also refuses
+    with pytest.raises(ArtifactError):
+        reg.register("bad", bad)
+    assert len(reg) == 0
+
+
+def test_truncated_pack_refused_with_TOAD112(packs, tmp_path):
+    _, _, _, pack = packs["binary"]
+    raw = Path(pack).read_bytes()
+    bad = tmp_path / "trunc.toadpack"
+    bad.write_bytes(raw[:-16])  # rips through the fingerprint section
+    diags = verify_pack(str(bad), deep=False)
+    assert "TOAD112" in {d.code for d in errors(diags)}
+    with pytest.raises(StreamingError, match="TOAD11"):
+        open_streaming(str(bad))
+
+
+def test_tampered_tree_order_refused_with_TOAD113(packs, tmp_path):
+    _, _, _, pack = packs["binary"]
+    raw = Path(pack).read_bytes()
+    mlen = int.from_bytes(raw[12:20], "little")
+    man = json.loads(raw[20:20 + mlen])
+    order = man["tree_order"]
+    # duplicate one single-digit entry over another so the serialized
+    # manifest keeps its exact byte length (offsets stay valid)
+    singles = [i for i, t in enumerate(order) if 0 <= t <= 9]
+    man["tree_order"] = list(order)
+    man["tree_order"][singles[0]] = order[singles[1]]
+    doc = json.dumps(man).encode("utf-8")
+    assert len(doc) == mlen
+    bad = tmp_path / "order.toadpack"
+    bad.write_bytes(raw[:20] + doc + raw[20 + mlen:])
+    diags = verify_pack(str(bad), deep=False)
+    assert "TOAD113" in {d.code for d in errors(diags)}
+    with pytest.raises(StreamingError, match="TOAD113"):
+        open_streaming(str(bad))
+
+
+def test_save_streaming_verifies_what_it_wrote(packs, tmp_path):
+    m, _, _, _ = packs["binary"]
+    out = str(tmp_path / "ok.toadpack")
+    save_streaming(m, out)
+    assert not errors(verify_pack(out, deep=True))
+
+
+# ------------------------------------------------------------ fleet wiring
+@pytest.fixture()
+def mixed_dir(tmp_path):
+    m, X = _fit("binary")
+    m = m.compress(spec=CompressionSpec.codebook_full(6, 4))
+    save_streaming(m, str(tmp_path / "a_pack.toadpack"))
+    m.save(str(tmp_path / "b_classic.toad"))
+    m2, _ = _fit("binary", seed=5)
+    m2 = m2.compress(spec=CompressionSpec.thr_codebook(6))
+    save_streaming(m2, str(tmp_path / "c_pack.toadpack"))
+    return tmp_path, m, X
+
+
+def test_registry_streaming_admission_order_and_log(mixed_dir, caplog):
+    d, _, _ = mixed_dir
+    with caplog.at_level(logging.INFO, logger="repro.fleet.registry"):
+        reg = ModelRegistry.from_dir(str(d), streaming=True)
+    assert reg.ids() == ["a_pack", "b_classic", "c_pack"]  # basename order
+    assert reg.get("a_pack").is_streaming
+    assert not reg.get("b_classic").is_streaming
+    admitted = [r.message for r in caplog.records if "admitted" in r.message]
+    assert len(admitted) == 3
+    # one line per model, in admission order, with elapsed milliseconds
+    assert [m.split()[1] for m in admitted] == ["a_pack", "b_classic", "c_pack"]
+    assert all("ms" in m for m in admitted)
+    assert "streaming" in admitted[0] and "streaming" not in admitted[1]
+
+
+def test_fleet_serves_streaming_entries_with_parity(mixed_dir):
+    d, _, X = mixed_dir
+    reg = ModelRegistry.from_dir(str(d), streaming=True)
+    with FleetEngine(reg, max_batch=32, streaming=True) as eng:
+        assert eng.wait_complete()  # every pack fully streamed in
+        for mid in reg.ids():
+            got = np.stack([eng.submit(mid, x).result() for x in X[:16]])
+            ref = reg.get(mid).model.predict(X[:16], backend="reference")
+            np.testing.assert_allclose(got, ref, rtol=ATOL, atol=ATOL)
+    stats = eng.stats()
+    assert set(stats.streaming) == {"a_pack", "c_pack"}
+    assert all(s["score_is_final"] for s in stats.streaming.values())
+
+
+def test_fleet_default_waits_for_final_scores(mixed_dir):
+    d, _, X = mixed_dir
+    reg = ModelRegistry.from_dir(str(d), streaming=False)
+    with FleetEngine(reg, max_batch=32) as eng:  # streaming not opted into
+        got = eng.predict("a_pack", X[:16])
+        ref = reg.get("a_pack").model.predict(X[:16], backend="reference")
+        np.testing.assert_allclose(got, ref, rtol=ATOL, atol=ATOL)
+    assert reg.get("a_pack").model.streaming_stats()["score_is_final"]
+
+
+def test_progressive_model_dedups_header_tables(mixed_dir):
+    d, _, _ = mixed_dir
+    reg = ModelRegistry.from_dir(str(d), streaming=True)
+    report = reg.memory_report()
+    # a_pack (streaming) and b_classic (same ladder) share their tables
+    assert report["dedup_saved_bytes"] > 0
+    assert report["models"]["a_pack"]["shared_bytes"] > 0
+
+
+def test_background_feeding_completes(mixed_dir):
+    d, _, X = mixed_dir
+    sm = open_streaming(str(d / "a_pack.toadpack"))
+    pm = ProgressiveModel(sm, background=True)
+    assert pm.wait_complete(timeout=30)
+    st = pm.streaming_stats()
+    assert st["blocks_evaluated"] == st["n_blocks"]
+    assert st["score_is_final"]
+
+
+# -------------------------------------------------------------- toadcheck
+def test_toadcheck_cli_on_packs(packs, tmp_path):
+    _, _, _, pack = packs["binary"]
+    ok = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "toadcheck.py"), pack],
+        capture_output=True, text=True, cwd=str(REPO))
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    bad = _corrupt_block(pack, tmp_path / "cli_bad.toadpack")
+    ko = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "toadcheck.py"), bad],
+        capture_output=True, text=True, cwd=str(REPO))
+    assert ko.returncode == 1
+    assert "TOAD111" in ko.stdout
+
+
+def test_block_reader_resident_accounting(packs):
+    _, _, _, pack = packs["binary"]
+    man = read_manifest(pack)
+    reader = BlockReader(pack)
+    assert reader.n_blocks == man["n_blocks"]
+    blob, entry = reader.block_bytes(0)
+    assert len(blob) == entry["n_bytes"]

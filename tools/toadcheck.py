@@ -7,11 +7,15 @@ Targets are dispatched by kind:
   codes ``TOAD2xx``);
 * anything else -> the artifact verifier (``repro.analysis.verify``,
   codes ``TOAD0xx``/``TOAD1xx``), run structurally — no decode-to-predict.
+  ``.toad``/npz bundles and ``.toadpack`` v4 streaming containers (codes
+  ``TOAD11x``: per-block digests, block layout, tree_order permutation)
+  are told apart by their magic bytes, so both verify with no extra flags.
 
 Usage::
 
     python tools/toadcheck.py                      # lint src/repro
     python tools/toadcheck.py model.toad           # verify one artifact
+    python tools/toadcheck.py model.toadpack       # verify a streaming pack
     python tools/toadcheck.py --format json src/repro model.toad
     python tools/toadcheck.py --write-baseline \
         --justification "deliberate static unroll" src/repro
