@@ -1,0 +1,286 @@
+"""Adaptive early exit: accuracy vs trees-evaluated vs serving latency.
+
+Early exit (``repro.gbdt.early_exit``) stops scoring a row once the
+remaining-mass bound proves no suffix of trees can change its
+``predict_label``.  On easy traffic — confident margins, the common case
+for a deployed classifier — most rows settle in a fraction of the
+ensemble, so the mean trees evaluated per row is the compute story and
+exact-label parity is the correctness story.  This benchmark measures
+both, plus the serving latency of the staged packed adapter
+(:class:`repro.api.engine.EarlyExitPredictor`) against the full packed
+predictor on the same probe set.
+
+The sweep axis is the policy: a margin-only policy (``epsilon=0``) is
+provably label-exact at whatever tree count the bound needs, while
+``max_trees`` caps trade label agreement for a hard latency ceiling —
+that is the accuracy-vs-trees curve.
+
+Writes ``BENCH_early_exit.json`` at the repo root (committed, the next
+PR's regression baseline).  ``--check`` fails on:
+
+  * any exited row whose label differs from the full ensemble (in-run,
+    machine-independent — the soundness contract),
+  * mean trees evaluated >= 0.8x the ensemble on the easy-traffic probe,
+  * >``CHECK_FACTOR``x regression vs this file's own committed p95, and
+    >``PREDICT_FACTOR``x vs the tree-count-scaled ``packed_us_per_row``
+    from ``BENCH_predict.json`` (looser: cross-benchmark, different
+    serving path — see the constant's comment).
+
+The ee-vs-full latency ratio is reported but not gated: at CI scale the
+staged adapter's per-stage dispatch overhead dominates the 48-tree model
+it saves trees on, and the wall-clock win belongs to the pallas
+tile-retirement kernel on real accelerators; what CI pins down is that
+the early-exit path stays within the predict budget tracked in
+``BENCH_predict.json``.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_early_exit.py --smoke
+    PYTHONPATH=src python benchmarks/bench_early_exit.py --smoke --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
+
+import numpy as np
+
+CHECK_FACTOR = 2.0
+#: headroom for the cross-benchmark gate against BENCH_predict's packed
+#: per-row cost: the staged adapter carries a fixed per-stage dispatch
+#: overhead (~2-3x tree-scaled packed at smoke scale) and p95-of-reps is
+#: noisy on shared CI runners, so this guard catches order-of-magnitude
+#: regressions only — the tight 2x tracking is p95_vs_baseline, against
+#: this benchmark's own committed numbers
+PREDICT_FACTOR = 4.0
+#: mean trees evaluated must stay under this fraction of the ensemble on
+#: the easy-traffic probe — the subsystem's reason to exist
+TREES_FRACTION = 0.8
+
+
+def _build_model(smoke):
+    """Easy-traffic binary model + a probe set drawn from the same stream.
+
+    The label depends on one strong feature, so a well-trained ensemble
+    reaches confident margins quickly — the regime early exit targets.
+    """
+    from repro.api import ToadModel
+
+    rounds = 48 if smoke else 96
+    n_probe = 2048 if smoke else 4096
+    rng = np.random.default_rng(42)
+    X = rng.standard_normal((4096, 16)).astype(np.float32)
+    y = (X[:, 0] + 0.25 * X[:, 1] > 0).astype(np.int32)
+    model = ToadModel(task="binary", n_bins=32, n_rounds=rounds, max_depth=3)
+    model.fit(X, y).compress()
+    probe = rng.standard_normal((n_probe, 16)).astype(np.float32)
+    y_probe = (probe[:, 0] + 0.25 * probe[:, 1] > 0).astype(np.int32)
+    return model, probe, y_probe
+
+
+def _labels(scores):
+    return (np.asarray(scores).reshape(len(scores), -1)[:, 0] > 0).astype(
+        np.int32)
+
+
+def _policy_sweep(model, probe, y_probe, full_labels, verbose=True):
+    """Margin-only exactness + max_trees caps: agreement vs trees curve."""
+    from repro.api import EarlyExitPolicy
+    from repro.gbdt.early_exit import predict_early_exit
+
+    T = int(model.forest.n_trees)
+    rows = []
+    caps = sorted({max(T // 4, 1), max(T // 2, 1), T})
+    policies = [("margin", EarlyExitPolicy(epsilon=0.0))] + [
+        (f"cap_{c}", EarlyExitPolicy(epsilon=0.0, max_trees=c)) for c in caps
+    ]
+    for name, policy in policies:
+        res = predict_early_exit(model.forest, probe, policy)
+        labels = _labels(res.scores)
+        rows.append({
+            "policy": name,
+            "epsilon": policy.epsilon,
+            "max_trees": policy.max_trees,
+            "mean_trees_evaluated": res.mean_trees_evaluated,
+            "frac_exited": res.frac_exited,
+            "label_agreement_vs_full": float(np.mean(labels == full_labels)),
+            "accuracy_vs_truth": float(np.mean(labels == y_probe)),
+        })
+        if verbose:
+            r = rows[-1]
+            print(f"[sweep {name:>8}] trees {r['mean_trees_evaluated']:5.1f}"
+                  f"/{T}  agreement {r['label_agreement_vs_full']:.4f}  "
+                  f"acc {r['accuracy_vs_truth']:.4f}", flush=True)
+    return rows
+
+
+def _time_us_per_row(fn, x, reps):
+    """Per-rep us/row; the first two calls (compile + warm caches) are free.
+
+    ``np.asarray`` inside the timed region blocks on jax's async dispatch,
+    so a lazily-returned device array cannot fake a near-zero latency.
+    """
+    np.asarray(fn(x))
+    np.asarray(fn(x))
+    out = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.asarray(fn(x))
+        out.append((time.perf_counter() - t0) * 1e6 / len(x))
+    return out
+
+
+def bench_early_exit(model, probe, y_probe, reps, verbose=True):
+    from repro.api import EarlyExitPolicy
+    from repro.api.engine import EarlyExitPredictor
+
+    T = int(model.forest.n_trees)
+    full_fn = model.predictor("packed")
+    full_labels = _labels(full_fn(probe))
+
+    policy = EarlyExitPolicy(epsilon=0.0)
+    adapter = EarlyExitPredictor(model, policy, backend="packed")
+    ee_scores = adapter(probe)
+    ee_labels = _labels(ee_scores)
+    adapter.reset()
+    adapter(probe)  # clean single-pass counters for the headline mean
+    mean_trees = adapter.mean_trees_evaluated()
+
+    # exactness on the probe set: every row, not only a sample
+    mismatches = int(np.sum(ee_labels != full_labels))
+
+    full_t = _time_us_per_row(full_fn, probe, reps)
+    ee_t = _time_us_per_row(lambda x: adapter(x), probe, reps)
+
+    out = {
+        "shape": {"n_probe": len(probe), "d": probe.shape[1], "n_trees": T,
+                  "mode": adapter.mode},
+        "headline": {
+            "mean_trees_evaluated": float(mean_trees),
+            "trees_fraction": float(mean_trees / T),
+            "label_mismatches": mismatches,
+        },
+        "latency": {
+            "full_p50_us_per_row": float(np.percentile(full_t, 50)),
+            "full_p95_us_per_row": float(np.percentile(full_t, 95)),
+            "ee_p50_us_per_row": float(np.percentile(ee_t, 50)),
+            "ee_p95_us_per_row": float(np.percentile(ee_t, 95)),
+        },
+        "sweep": _policy_sweep(model, probe, y_probe, full_labels,
+                               verbose=verbose),
+    }
+    if verbose:
+        h, la = out["headline"], out["latency"]
+        print(f"[early-exit] trees {h['mean_trees_evaluated']:.1f}/{T} "
+              f"({h['trees_fraction']:.0%}), mismatches "
+              f"{h['label_mismatches']}, p95 {la['ee_p95_us_per_row']:.2f} "
+              f"us/row vs full {la['full_p95_us_per_row']:.2f}", flush=True)
+    return out
+
+
+def _load_baseline(name):
+    path = os.path.join(ROOT, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _write(name, payload):
+    with open(os.path.join(ROOT, name), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+        f.write("\n")
+
+
+def run(smoke=True, check=False, verbose=True):
+    import jax
+
+    reps = 30 if smoke else 50
+    base_self = _load_baseline("BENCH_early_exit.json")
+    base_pred = _load_baseline("BENCH_predict.json")
+    model, probe, y_probe = _build_model(smoke)
+    results = bench_early_exit(model, probe, y_probe, reps, verbose=verbose)
+    payload = {
+        "meta": {
+            "smoke": smoke,
+            "reps": reps,
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]),
+        },
+        **results,
+    }
+    _write("BENCH_early_exit.json", payload)
+
+    failures = []
+    T = results["shape"]["n_trees"]
+
+    def gate(name, ok, detail):
+        status = "ok" if ok else "FAIL"
+        if verbose or not ok:
+            print(f"[check] {name}: {detail}  {status}", flush=True)
+        if not ok:
+            failures.append(name)
+
+    # in-run, machine-independent
+    h, la = results["headline"], results["latency"]
+    gate("label_exactness", h["label_mismatches"] == 0,
+         f"{h['label_mismatches']} mismatch(es) on {len(probe)} probe rows")
+    gate("trees_saved", h["mean_trees_evaluated"] < TREES_FRACTION * T,
+         f"mean {h['mean_trees_evaluated']:.1f} vs cap "
+         f"{TREES_FRACTION * T:.1f} ({TREES_FRACTION:.0%} of {T})")
+    if verbose:
+        ratio = la["ee_p95_us_per_row"] / max(la["full_p95_us_per_row"],
+                                              1e-9)
+        print(f"[info] ee/full p95 ratio {ratio:.2f}x (reported, not "
+              f"gated — see module docstring)", flush=True)
+
+    # committed baselines (size-matched only)
+    if base_self is not None and base_self.get("meta", {}).get(
+            "smoke") == smoke:
+        old = float(base_self["latency"]["ee_p95_us_per_row"])
+        new = la["ee_p95_us_per_row"]
+        gate("p95_vs_baseline", new <= CHECK_FACTOR * old,
+             f"{old:.2f} -> {new:.2f} us/row ({new / max(old, 1e-9):.2f}x)")
+    elif verbose:
+        print("[check] BENCH_early_exit.json: no size-matched baseline, "
+              "skipping", flush=True)
+    if base_pred is not None and base_pred.get("meta", {}).get(
+            "smoke") == smoke:
+        # packed cost scales ~linearly in trees; scale the committed
+        # BENCH_predict per-row cost to this ensemble before comparing
+        p = base_pred["predict"]
+        allowed = (float(p["packed_us_per_row"])
+                   * T / max(int(p["shape"]["n_trees"]), 1) * PREDICT_FACTOR)
+        gate("p95_vs_bench_predict", la["ee_p95_us_per_row"] <= allowed,
+             f"ee p95 {la['ee_p95_us_per_row']:.2f} us/row vs allowed "
+             f"{allowed:.2f} ({PREDICT_FACTOR}x tree-scaled packed baseline)")
+    elif verbose:
+        print("[check] BENCH_predict.json: no size-matched baseline, "
+              "skipping", flush=True)
+
+    if check and failures:
+        print(f"early-exit gate: {len(failures)} check(s) failed: "
+              f"{', '.join(failures)}", flush=True)
+        return 1
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on label mismatches, insufficient tree "
+                         "savings, or latency regressions")
+    args = ap.parse_args()
+    sys.exit(run(smoke=args.smoke, check=args.check))
+
+
+if __name__ == "__main__":
+    main()

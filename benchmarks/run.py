@@ -78,6 +78,18 @@ def main() -> None:
 
     bench("coldstart", coldstart_bench)
 
+    def early_exit_bench():
+        # margin early exit: trees saved vs label exactness vs latency
+        import json as _json
+
+        from benchmarks import bench_early_exit
+
+        bench_early_exit.run(smoke=not args.full, check=False, verbose=False)
+        with open("BENCH_early_exit.json") as f:
+            return _json.load(f)
+
+    bench("early_exit", early_exit_bench)
+
     # trend checks + headline numbers
     print("\n=== summary (name,us_per_call,derived) ===")
     for name, dt, out in summary:
@@ -107,6 +119,12 @@ def main() -> None:
             derived = (
                 f"fleet_streaming_p50={out['fleet']['streaming_p50_ms']:.1f}ms "
                 f"speedup={out['fleet']['speedup_classic_over_streaming']:.0f}x")
+        elif name == "early_exit" and out:
+            h = out["headline"]
+            derived = (
+                f"mean_trees={h['mean_trees_evaluated']:.1f}"
+                f"/{out['shape']['n_trees']} "
+                f"mismatches={h['label_mismatches']}")
         elif name == "roofline" and out:
             ok = [r for r in out if r.get("status") == "OK" and r.get("mfu_floor") == r.get("mfu_floor")]
             if ok:

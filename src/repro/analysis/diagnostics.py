@@ -96,6 +96,14 @@ CATALOG: dict[str, tuple[str, str]] = {
                        "trees"),
     "TOAD114": (ERROR, "stream header and manifest disagree: regenerate the "
                        "pack with save_streaming"),
+    # ---- early-exit bound table (verify_bundle / verify_pack) -----------
+    "TOAD120": (ERROR, "early_exit bound table does not match the shipped "
+                       "trees: regenerate the artifact so margin exits stay "
+                       "label-exact"),
+    "TOAD121": (ERROR, "early_exit section malformed: remaining_mass must "
+                       "be a finite (n_trees+1, n_classes) non-increasing "
+                       "suffix table ending at zero, with a parseable "
+                       "policy"),
     # ---- code lint (lint.py) --------------------------------------------
     "TOAD201": (ERROR, "count/histogram tensor cast to bf16/f16: counts and "
                        "accumulators must stay fp32 (PR-3 contract)"),

@@ -22,6 +22,12 @@ bit is dereferenced:
   actual payload length, spec<->stream layout agreement, the sha256 stream
   digest, and the dense forest arrays (edge-row monotonicity, reference
   ranges).
+* **early-exit bounds** (``TOAD120``/``TOAD121``) — a manifest that ships
+  an ``early_exit`` section (bound table + policy) is checked structurally
+  (shape, monotone non-increasing suffix, zero final row, parseable
+  policy) and, in the deep pass, the ``remaining_mass`` table is
+  recomputed from the shipped trees and must match: a stale or tampered
+  table silently voids the exact-``predict_label`` guarantee.
 
 Every finding is located via :func:`repro.core.layout.stream_offsets`
 (section name + bit offset) and carries a fix hint.  The walk is strictly
@@ -278,6 +284,85 @@ def verify_stream(encoded: EncodedModel, path: str = "") -> list[Diagnostic]:
 
 
 # --------------------------------------------------------------------------
+# Early-exit bound-table verification (TOAD12x)
+# --------------------------------------------------------------------------
+
+
+def _early_exit_table(ee, n_trees: int, n_ensembles: int, path: str,
+                      diags: list[Diagnostic]) -> "np.ndarray | None":
+    """Structurally validate a manifest ``early_exit`` section (TOAD121).
+
+    Returns the parsed ``(n_trees + 1, n_ensembles)`` float64 bound table,
+    or ``None`` after emitting a diagnostic if the section is malformed.
+    An early exit decided against a bad table can silently change
+    ``predict_label``, so every rule the decision relies on is enforced:
+    shape, finiteness, non-negativity, monotone non-increasing columns and
+    an all-zero final row.
+    """
+
+    def diag(message):
+        diags.append(Diagnostic(code="TOAD121", message=message, file=path,
+                                section="early_exit"))
+
+    if not isinstance(ee, dict):
+        diag("early_exit section is not a mapping")
+        return None
+    rm = ee.get("remaining_mass")
+    if rm is None:
+        diag("early_exit section has no remaining_mass table")
+        return None
+    try:
+        table = np.asarray(rm, np.float64)
+    except (TypeError, ValueError) as e:
+        diag(f"remaining_mass does not parse as a float matrix: {e}")
+        return None
+    if table.ndim != 2 or table.shape != (n_trees + 1, n_ensembles):
+        diag(f"remaining_mass has shape {table.shape}, expected "
+             f"({n_trees + 1}, {n_ensembles}) for a {n_trees}-tree, "
+             f"{n_ensembles}-class forest")
+        return None
+    if not np.all(np.isfinite(table)):
+        diag("remaining_mass contains non-finite entries")
+        return None
+    if np.any(table < 0) or np.any(table[-1] != 0.0) or \
+            np.any(np.diff(table, axis=0) > 0):
+        diag("remaining_mass is not a non-negative, monotone non-increasing "
+             "suffix table ending at zero — it cannot be a valid "
+             "remaining-score-mass bound")
+        return None
+    policy = ee.get("policy")
+    if policy is not None:
+        from repro.gbdt.early_exit import EarlyExitPolicy  # lazy: cycle
+
+        try:
+            EarlyExitPolicy.from_dict(dict(policy))
+        except (TypeError, ValueError, KeyError) as e:
+            diag(f"early-exit policy does not parse: {e}")
+            return None
+    return table
+
+
+def _compare_bound_table(table: np.ndarray, expect: np.ndarray, path: str,
+                         diags: list[Diagnostic]) -> None:
+    """TOAD120: shipped bound table vs one recomputed from the forest.
+
+    The recompute uses the same fixed float64 summation order as the
+    writer, so a genuine table matches far inside the tolerance; any
+    mismatch means the manifest and the forest disagree about how much
+    score the remaining trees can move — an exit decided against it is no
+    longer provably label-safe.
+    """
+    err = (float(np.max(np.abs(table - expect) / (1.0 + np.abs(expect))))
+           if table.size else 0.0)
+    if err > 1e-9:
+        diags.append(Diagnostic(
+            code="TOAD120", file=path, section="early_exit",
+            message=f"early_exit remaining_mass does not match the shipped "
+                    f"forest (max relative error {err:.2e}) — exits decided "
+                    f"against this table could change predict_label"))
+
+
+# --------------------------------------------------------------------------
 # Bundle-level verification
 # --------------------------------------------------------------------------
 
@@ -443,6 +528,25 @@ def verify_bundle(meta: dict | None, arrays: Mapping,
                 diag("TOAD104", f"shipped forest re-encodes to "
                      f"{expect['total_bytes']:.1f} B but the stream holds "
                      f"{encoded.n_bytes:.1f} B")
+
+    # ---- early-exit bound table (TOAD120/TOAD121) ------------------------
+    if "early_exit" in meta and not errors(diags):
+        K = int(np.asarray(arrays["n_trees"]))
+        table = _early_exit_table(meta["early_exit"], K, n_ensembles,
+                                  path, diags)
+        if table is not None:
+            from types import SimpleNamespace
+
+            from repro.core.treeorder import remaining_mass
+
+            duck = SimpleNamespace(
+                n_trees=K,
+                is_split=np.asarray(arrays["is_split"]),
+                leaf_ref=np.asarray(arrays["leaf_ref"]),
+                leaf_values=np.asarray(arrays["leaf_values"]),
+                n_ensembles=n_ensembles,
+            )
+            _compare_bound_table(table, remaining_mass(duck), path, diags)
     return diags
 
 
@@ -573,6 +677,13 @@ def verify_pack(path: str, deep: bool = True) -> list[Diagnostic]:
         return True
 
     header_ok = check_digest("header", header)
+    # structural early-exit rules run even in the shallow pass — a scorer's
+    # feed_until_confident trusts this table before any block is decoded
+    ee_table = None
+    if "early_exit" in manifest:
+        ee_table = _early_exit_table(
+            manifest["early_exit"], K, int(manifest["n_ensembles"]),
+            path, diags)
     if not deep:
         return diags
     blocks_ok = all([check_digest(f"tree block {i}", b)
@@ -595,6 +706,29 @@ def verify_pack(path: str, deep: bool = True) -> list[Diagnostic]:
         diag("TOAD111", "reassembled stream digest does not match the "
              "manifest stream_sha256", section="manifest")
     diags.extend(verify_stream(encoded, path=path))
+
+    # ---- early-exit bound table vs the shipped trees (TOAD120) -----------
+    # the pack stores trees permuted by tree_order, so position p's step is
+    # the decoded tree p's max reachable |leaf| and its class identity is
+    # tree_order[p] % C — exactly how the streaming scorer accumulates
+    if ee_table is not None and not errors(diags):
+        from types import SimpleNamespace
+
+        from repro.core.layout import decode
+        from repro.core.treeorder import suffix_bound, tree_max_step
+
+        C = int(manifest["n_ensembles"])
+        dec = decode(encoded)
+        duck = SimpleNamespace(
+            n_trees=dec.is_split.shape[0],
+            is_split=dec.is_split,
+            leaf_ref=dec.leaf_ref,
+            leaf_values=dec.leaf_values,
+            n_ensembles=C,
+        )
+        classes = np.asarray(manifest["tree_order"], np.int64) % max(C, 1)
+        expect = suffix_bound(tree_max_step(duck), classes, C)
+        _compare_bound_table(ee_table, expect, path, diags)
     return diags
 
 

@@ -20,11 +20,13 @@ from repro.api.backends import (
     resolve_backend,
 )
 from repro.api.engine import (
+    EarlyExitPredictor,
     EngineStats,
     GBDTEngine,
     MicroBatchEngine,
     fallback_chain,
 )
+from repro.gbdt.early_exit import EarlyExitPolicy
 from repro.api.model import NotFittedError, ToadModel
 from repro.api.resilience import (
     BadRequest,
@@ -70,6 +72,8 @@ __all__ = [
     "list_backends",
     "register_backend",
     "resolve_backend",
+    "EarlyExitPolicy",
+    "EarlyExitPredictor",
     "EngineStats",
     "GBDTEngine",
     "MicroBatchEngine",

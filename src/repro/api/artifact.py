@@ -143,6 +143,17 @@ def save_artifact(model, path: str, verify: bool = True) -> str:
             else None
         ),
     }
+    ee_policy = getattr(model, "early_exit_policy", None)
+    if ee_policy is not None:
+        from repro.core.treeorder import remaining_mass
+
+        # bound table for the bundle's (original) tree order; toadcheck
+        # TOAD120 recomputes it from the shipped forest at load time
+        meta["early_exit"] = {
+            "policy": ee_policy.to_dict(),
+            "remaining_mass": [[float(v) for v in row]
+                               for row in remaining_mass(model.forest)],
+        }
     arrays["meta_json"] = np.frombuffer(
         json.dumps(meta).encode("utf-8"), dtype=np.uint8
     )
@@ -174,7 +185,9 @@ def save_streaming(model, path: str, verify: bool = True, **kwargs) -> str:
     / :class:`~repro.stream.progressive.ProgressiveScorer`).
 
     ``kwargs`` pass through to :func:`repro.stream.format.write_pack`
-    (``tree_block``, ``tree_order``).  With ``verify=True`` (default) the
+    (``tree_block``, ``tree_order``, ``early_exit``; the early-exit
+    ``remaining_mass`` bound table is embedded in the manifest
+    unconditionally).  With ``verify=True`` (default) the
     written container is structurally re-verified (``verify_pack``,
     TOAD11x + the reassembled-stream TOAD00x walk) before the path is
     returned, mirroring :func:`save_artifact`'s producer-side guarantee.
@@ -257,6 +270,12 @@ def load_artifact(path: str, verify: bool = True, _structural: bool = True):
             if meta.get("spec"):
                 model.spec = CompressionSpec.from_dict(meta["spec"])
             model.artifact_meta = meta
+            ee = meta.get("early_exit")
+            if ee and ee.get("policy"):
+                from repro.gbdt.early_exit import EarlyExitPolicy
+
+                model.early_exit_policy = EarlyExitPolicy.from_dict(
+                    ee["policy"])
             if verify and fp and "fingerprint_preds" in z:
                 current = probe_predictions(
                     model.forest, n=fp["n_probe"], seed=fp["seed"]

@@ -68,6 +68,219 @@ def fallback_chain(model, primary: str) -> list:
     return [(name, model.predictor(name)) for name in order[start:]]
 
 
+class EarlyExitPredictor:
+    """A ``(n, d) -> (n, C)`` adapter that realizes early exits per backend.
+
+    Wraps a fitted :class:`~repro.api.model.ToadModel` and an
+    :class:`~repro.gbdt.early_exit.EarlyExitPolicy`; the engine plugs it in
+    as the primary predict function and reads its trees-evaluated counters
+    into ``EngineStats.mean_trees_evaluated``.  Per backend:
+
+    * ``pallas`` — the tile-retirement kernel
+      (:func:`repro.kernels.ops.predict_packed_model_early_exit`);
+    * ``packed`` — staged prefix evaluation: the packed kernel runs on
+      doubling ``TREE_BLOCK``-aligned tree prefixes, rows that are
+      decision-final at a checkpoint keep their prefix scores and drop out
+      of later stages (row counts bucket to powers of two, so compiles are
+      bounded);
+    * ``reference`` — the row-level numpy evaluator
+      (:func:`repro.gbdt.early_exit.predict_early_exit`).
+
+    A never-exit policy (ε=∞) short-circuits to the model's plain
+    predictor, so it is bit-identical to serving without early exit.
+    Exited rows return their partial sums — same label, not the same
+    score, as full evaluation.  Counter note: the engine pads batches to
+    shape buckets, so padded rows count toward ``mean_trees_evaluated``
+    like real ones.
+    """
+
+    def __init__(self, model, policy, backend: str | None = None):
+        from repro.api.backends import resolve_backend
+        from repro.core.treeorder import remaining_mass
+
+        if model.config.task == "regression":
+            raise ValueError(
+                "early exit needs a discrete decision to protect; "
+                "regression scores never become margin-final"
+            )
+        self.model = model
+        self.policy = policy
+        self.backend_name = resolve_backend(
+            backend, compressed=model.is_compressed).name
+        self._backend_arg = backend
+        self.n_trees = int(model.forest.n_trees)
+        self.C = int(model.forest.n_ensembles)
+        self._t_eff = (self.n_trees if policy.max_trees is None
+                       else min(int(policy.max_trees), self.n_trees))
+        self._lock = threading.Lock()
+        self._rows = 0
+        self._trees = 0.0
+
+        if policy.never_exits or self.n_trees == 0:
+            self._mode = "full"
+            self._full = model.predictor(backend)
+            return
+        self._bound = remaining_mass(model.forest)
+        self._slack = policy.slack(self.C)
+        if self.backend_name == "reference":
+            self._mode = "reference"
+            return
+        if not model.is_compressed:
+            model.compress()
+        if self.backend_name == "pallas":
+            self._mode = "kernel"
+            self._init_kernel()
+        else:
+            self._mode = "staged"
+            self._init_staged()
+
+    # -------------------------------------------------------------- modes
+    def _init_kernel(self):
+        packed = self.model.packed
+        self._k_packed = packed
+        self._k_bound = self._bound
+        if self._t_eff < self.n_trees:  # max_trees cap: serve the prefix
+            self._k_packed = dataclasses.replace(
+                packed,
+                words=np.asarray(packed.words)[: self._t_eff],
+                leaf_ref=np.asarray(packed.leaf_ref)[: self._t_eff],
+            )
+            self._k_bound = self._bound[: self._t_eff + 1]
+
+    def _init_staged(self):
+        import jax.numpy as jnp
+
+        from repro.kernels.predict import TREE_BLOCK
+
+        packed = self.model.packed
+        T = self._t_eff
+        # checkpoints double from one tree block; every edge is a multiple
+        # of C (tree_block is), so a prefix kernel call assigns the right
+        # class columns
+        tb = -(-TREE_BLOCK // self.C) * self.C
+        ks: list[int] = []
+        k = tb
+        while k < T:
+            ks.append(k)
+            k *= 2
+        edges = [0] + ks + [T]
+        self._edges = list(zip(edges[:-1], edges[1:]))
+        words = np.asarray(packed.words)
+        lref = np.asarray(packed.leaf_ref)
+        zero_base = jnp.zeros_like(jnp.asarray(packed.base_score))
+        self._stage_arrays = [
+            (jnp.asarray(words[a:b]), jnp.asarray(lref[a:b]),
+             jnp.asarray(packed.base_score) if a == 0 else zero_base)
+            for a, b in self._edges
+        ]
+        self._tables = tuple(
+            jnp.asarray(getattr(packed, f))
+            for f in ("leaf_values", "thr_table", "thr_offsets",
+                      "used_features")
+        )
+
+    def _run_stage(self, si: int, xa: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import _interp
+        from repro.kernels.predict import packed_predict
+
+        packed = self.model.packed
+        m = xa.shape[0]
+        mb = 1 << (m - 1).bit_length()  # pow-2 bucket bounds retraces
+        if mb != m:
+            xa = np.concatenate(
+                [xa, np.zeros((mb - m, xa.shape[1]), np.float32)])
+        words, lref, base = self._stage_arrays[si]
+        leaf_values, thr_table, thr_offsets, used_features = self._tables
+        out = packed_predict(
+            jnp.asarray(xa), words, lref, leaf_values, thr_table,
+            thr_offsets, used_features, base,
+            max_depth=packed.max_depth, tidx_bits=packed.tidx_bits,
+            n_ensembles=self.C, interpret=_interp(),
+        )
+        return np.asarray(out)[:m]
+
+    def _staged(self, x: np.ndarray):
+        from repro.gbdt.early_exit import decision_final_mask
+
+        n = x.shape[0]
+        partial = np.zeros((n, self.C), np.float32)
+        trees = np.full(n, self._t_eff, np.int32)
+        active = np.arange(n)
+        for si, (a, b) in enumerate(self._edges):
+            vals = self._run_stage(si, x[active])
+            if a == 0:
+                partial[active] = vals
+            else:
+                partial[active] += vals
+            if b >= self._t_eff:
+                break
+            if b >= self.policy.min_trees:
+                fin = np.asarray(decision_final_mask(
+                    partial[active].astype(np.float64), self._bound[b],
+                    self._slack, self.policy.guard))
+                trees[active[fin]] = b
+                active = active[~fin]
+            if active.size == 0:
+                break
+        return partial, trees
+
+    # --------------------------------------------------------------- call
+    def __call__(self, rows) -> np.ndarray:
+        x = np.asarray(rows, np.float32)
+        n = x.shape[0]
+        if self._mode == "full":
+            out = np.asarray(self._full(x))
+            self._account(n, float(n * self.n_trees))
+            return out
+        if self._mode == "kernel":
+            from repro.kernels.ops import predict_packed_model_early_exit
+
+            scores, trees, _ = predict_packed_model_early_exit(
+                self._k_packed, x, self._k_bound, self._slack,
+                guard=self.policy.guard, min_trees=self.policy.min_trees)
+            scores = np.asarray(scores)
+        elif self._mode == "reference":
+            from repro.gbdt.early_exit import predict_early_exit
+            from repro.kernels.predict import TREE_BLOCK
+
+            res = predict_early_exit(
+                self.model.forest, x, self.policy, bound=self._bound,
+                check_every=TREE_BLOCK)
+            scores, trees = res.scores, res.trees_evaluated
+        else:
+            scores, trees = self._staged(x)
+        self._account(n, float(np.sum(trees)))
+        return scores
+
+    @property
+    def mode(self) -> str:
+        """The serving path in use: full | reference | kernel | staged."""
+        return self._mode
+
+    # -------------------------------------------------------------- stats
+    def _account(self, n: int, trees_total: float) -> None:
+        with self._lock:
+            self._rows += n
+            self._trees += trees_total
+
+    def reset(self) -> None:
+        """Zero the counters (the engine calls this after warmup)."""
+        with self._lock:
+            self._rows = 0
+            self._trees = 0.0
+
+    def mean_trees_evaluated(self) -> float:
+        with self._lock:
+            return self._trees / self._rows if self._rows else 0.0
+
+    def rows_counted(self) -> int:
+        """Rows accounted so far (the weight for fleet-wide merging)."""
+        with self._lock:
+            return self._rows
+
+
 class _EngineFuture(concurrent.futures.Future):
     """A Future that enforces the request deadline inside ``result()``."""
 
@@ -117,6 +330,12 @@ class EngineStats:
     breaker_state: dict = dataclasses.field(default_factory=dict)
     #: the backend that served the most recent batch
     active_backend: str = ""
+    #: mean trees evaluated per row under an early-exit policy (0.0 when
+    #: early exit is off; includes batch-padding rows)
+    mean_trees_evaluated: float = 0.0
+    #: rows the early-exit adapter accounted (the merge weight; counts
+    #: direct ``predict()`` traffic that never enters the request queue)
+    n_early_exit_rows: int = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -136,6 +355,8 @@ class EngineStats:
         if not parts:
             return EngineStats(0, 0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
         n = sum(p.n_requests for p in parts)
+        ee_parts = [p for p in parts if p.n_early_exit_rows > 0]
+        ee_n = sum(p.n_early_exit_rows for p in ee_parts)
         wall = max(p.wall_s for p in parts)
         wavg = (
             lambda f: sum(f(p) * p.n_requests for p in parts) / n if n else 0.0
@@ -167,6 +388,13 @@ class EngineStats:
             n_worker_restarts=sum(p.n_worker_restarts for p in parts),
             n_predict_retries=sum(p.n_predict_retries for p in parts),
             n_fallback_batches=sum(p.n_fallback_batches for p in parts),
+            # row-weighted over the engines actually running early exit
+            mean_trees_evaluated=(
+                sum(p.mean_trees_evaluated * p.n_early_exit_rows
+                    for p in ee_parts)
+                / ee_n if ee_n else 0.0
+            ),
+            n_early_exit_rows=ee_n,
         )
 
 
@@ -185,8 +413,12 @@ class MicroBatchEngine:
         backend_name: str = "primary",
         faults=None,
         fault_tag: str = "",
+        early_exit: EarlyExitPredictor | None = None,
     ):
         self._predict = predict_fn
+        #: the EarlyExitPredictor serving as predict_fn, if any — read for
+        #: EngineStats.mean_trees_evaluated and reset after warmup
+        self._early_exit = early_exit
         self.n_features = n_features
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
@@ -295,6 +527,8 @@ class MicroBatchEngine:
             # a broken primary with fallbacks available is a degraded
             # start, not a failed one: trip its breaker and serve on
             self._breakers[0].trip()
+        if self._early_exit is not None:
+            self._early_exit.reset()  # warmup rows must not skew the mean
         self._t_start = time.perf_counter()
         self._worker = threading.Thread(
             target=self._supervise, name="gbdt-engine", daemon=True
@@ -542,6 +776,14 @@ class MicroBatchEngine:
                 for (name, _), br in zip(self._chain, self._breakers)
             },
             active_backend=self._chain[self._active_idx][0],
+            mean_trees_evaluated=(
+                self._early_exit.mean_trees_evaluated()
+                if self._early_exit is not None else 0.0
+            ),
+            n_early_exit_rows=(
+                self._early_exit.rows_counted()
+                if self._early_exit is not None else 0
+            ),
         )
 
 
@@ -557,6 +799,12 @@ class GBDTEngine(MicroBatchEngine):
     the backend registry (:func:`fallback_chain`): a ``pallas`` engine
     falls back to ``packed`` then ``reference`` when its breaker opens —
     slower, but inside the <=1e-5 parity contract.
+
+    ``early_exit`` takes an :class:`~repro.gbdt.early_exit
+    .EarlyExitPolicy`: the primary predict function becomes an
+    :class:`EarlyExitPredictor` (same labels, partial scores on exited
+    rows) and ``stats().mean_trees_evaluated`` reports the per-row average
+    prefix length.
     """
 
     def __init__(
@@ -569,6 +817,7 @@ class GBDTEngine(MicroBatchEngine):
         policy: ResiliencePolicy | None = None,
         faults=None,
         fault_tag: str = "",
+        early_exit=None,
     ):
         if isinstance(model, (str, os.PathLike)):
             from repro.api.artifact import load_checked
@@ -576,8 +825,16 @@ class GBDTEngine(MicroBatchEngine):
             model = load_checked(model).model
         from repro.api.backends import resolve_backend
 
-        fn = model.predictor(backend)
+        ee_adapter = None
+        if early_exit is not None:
+            ee_adapter = EarlyExitPredictor(model, early_exit,
+                                            backend=backend)
+            fn = ee_adapter
+        else:
+            fn = model.predictor(backend)
         primary = resolve_backend(backend, compressed=model.is_compressed).name
+        # fallbacks stay full-evaluation predictors: degraded-but-correct,
+        # they just stop saving trees
         fallbacks = (
             fallback_chain(model, primary)
             if policy is not None and policy.fallback
@@ -594,6 +851,8 @@ class GBDTEngine(MicroBatchEngine):
             backend_name=primary,
             faults=faults,
             fault_tag=fault_tag,
+            early_exit=ee_adapter,
         )
         self.model = model
         self.backend = backend or "auto"
+        self.early_exit = early_exit

@@ -81,6 +81,10 @@ class ToadModel:
         self.spec: CompressionSpec | None = None
         self.compression_report: CompressionReport | None = None
         self.artifact_meta: dict | None = None
+        #: optional EarlyExitPolicy serialized into .toad/.toadpack
+        #: manifests; a serving preference, not fit state, so refits and
+        #: recompression leave it in place
+        self.early_exit_policy = None
         self._forest_exact: Forest | None = None
         self._loss = make_loss(config.task, config.n_classes)
         self._predict_fns: dict[str, object] = {}

@@ -7,6 +7,8 @@
   budget-targeted search).
 - ``codebook``: shared-value-table (k-means) quantization, used by the
   ``leaf_codebook`` pipeline stage and for LM serving-weight experiments.
+- ``treeorder``: the shared reachable-leaf mass pass behind the
+  ``.toadpack`` streaming order and the early-exit bound tables.
 """
 
 from repro.core.bitio import BitReader, BitWriter, bits_for
@@ -43,6 +45,14 @@ from repro.core.pipeline import (
     run_pipeline,
     search_budget,
 )
+from repro.core.treeorder import (
+    reachable_leaf_mask,
+    remaining_mass,
+    suffix_bound,
+    tree_mass,
+    tree_max_step,
+    tree_order_most_informative,
+)
 
 __all__ = [
     "BitReader",
@@ -75,4 +85,10 @@ __all__ = [
     "register_stage",
     "run_pipeline",
     "search_budget",
+    "reachable_leaf_mask",
+    "remaining_mass",
+    "suffix_bound",
+    "tree_mass",
+    "tree_max_step",
+    "tree_order_most_informative",
 ]

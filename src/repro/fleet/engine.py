@@ -36,7 +36,12 @@ import threading
 
 import numpy as np
 
-from repro.api.engine import EngineStats, MicroBatchEngine, fallback_chain
+from repro.api.engine import (
+    EarlyExitPredictor,
+    EngineStats,
+    MicroBatchEngine,
+    fallback_chain,
+)
 from repro.fleet.registry import ModelRegistry, UnknownModelError
 
 __all__ = ["FleetEngine", "FleetStats", "UnknownModelError"]
@@ -101,6 +106,7 @@ class FleetEngine:
         policy=None,
         faults=None,
         streaming: bool = False,
+        early_exit=None,
     ):
         if max_hot < 1:
             raise ValueError("max_hot must be >= 1")
@@ -110,6 +116,10 @@ class FleetEngine:
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
         self.policy = policy
+        #: fleet-wide EarlyExitPolicy; applied per classification model,
+        #: skipped for streaming entries (which exit via
+        #: ProgressiveScorer.feed_until_confident) and regression tasks
+        self.early_exit = early_exit
         #: serve partial sums from streaming entries (opt-in); with the
         #: default False a .toadpack entry waits for its last tree block
         #: before its backend is built, so every score is final
@@ -205,8 +215,18 @@ class FleetEngine:
                 if self.policy is not None and self.policy.fallback
                 else ()
             )
+            ee_adapter = None
+            if (
+                self.early_exit is not None
+                and not entry.is_streaming
+                and entry.model.config.task != "regression"
+            ):
+                ee_adapter = EarlyExitPredictor(
+                    entry.model, self.early_exit, backend=self.backend
+                )
             engine = MicroBatchEngine(
-                entry.model.predictor(self.backend),
+                ee_adapter if ee_adapter is not None
+                else entry.model.predictor(self.backend),
                 int(entry.model.forest.n_features),
                 max_batch=self.max_batch,
                 max_wait_ms=self.max_wait_ms,
@@ -215,6 +235,7 @@ class FleetEngine:
                 backend_name=primary,
                 faults=self._faults,
                 fault_tag=model_id,
+                early_exit=ee_adapter,
             )
             if self._started:
                 engine.start()

@@ -1,4 +1,12 @@
 from repro.gbdt.binning import apply_bins, fit_bins
+from repro.gbdt.early_exit import (
+    EarlyExitPolicy,
+    EarlyExitResult,
+    decision_final_mask,
+    predict_early_exit,
+    predict_label_from_scores,
+    remaining_mass,
+)
 from repro.gbdt.forest import Forest, empty_forest, predict_binned, predict_raw
 from repro.gbdt.losses import make_loss
 from repro.gbdt.trainer import GBDTConfig, train, train_grid, train_jit
@@ -6,6 +14,12 @@ from repro.gbdt.trainer import GBDTConfig, train, train_grid, train_jit
 __all__ = [
     "apply_bins",
     "fit_bins",
+    "EarlyExitPolicy",
+    "EarlyExitResult",
+    "decision_final_mask",
+    "predict_early_exit",
+    "predict_label_from_scores",
+    "remaining_mass",
     "Forest",
     "empty_forest",
     "predict_binned",

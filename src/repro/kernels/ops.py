@@ -50,7 +50,7 @@ if typing.TYPE_CHECKING:  # import cycle: core.layout -> gbdt -> trainer -> ops
 
 from repro.kernels.binning import binning
 from repro.kernels.histogram import histogram, histogram_fused
-from repro.kernels.predict import packed_predict
+from repro.kernels.predict import packed_predict, packed_predict_early_exit
 from repro.kernels.ref import histogram_ref
 
 HIST_METHODS = ("ref", "fused", "pallas")
@@ -137,5 +137,35 @@ def predict_packed_model(packed: PackedEnsemble, x) -> jax.Array:
         max_depth=packed.max_depth,
         tidx_bits=packed.tidx_bits,
         n_ensembles=packed.n_ensembles,
+        interpret=_interp(),
+    )
+
+
+def predict_packed_model_early_exit(
+    packed: PackedEnsemble, x, bound, slack, *,
+    guard: float = 0.0, min_trees: int = 0,
+):
+    """Early-exit packed inference: (scores, trees_evaluated, exited).
+
+    ``bound``/``slack``/``guard`` as in
+    :func:`repro.kernels.predict.packed_predict_early_exit`; sample tiles
+    retire between tree blocks once every row is decision-final.
+    """
+    return packed_predict_early_exit(
+        jnp.asarray(x),
+        jnp.asarray(packed.words),
+        jnp.asarray(packed.leaf_ref),
+        jnp.asarray(packed.leaf_values),
+        jnp.asarray(packed.thr_table),
+        jnp.asarray(packed.thr_offsets),
+        jnp.asarray(packed.used_features),
+        jnp.asarray(packed.base_score),
+        bound,
+        slack,
+        max_depth=packed.max_depth,
+        tidx_bits=packed.tidx_bits,
+        n_ensembles=packed.n_ensembles,
+        guard=guard,
+        min_trees=min_trees,
         interpret=_interp(),
     )

@@ -37,10 +37,19 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 TILE = 256
 TREE_BLOCK = 8
+
+
+def _decision_final():
+    # lazy: repro.gbdt.__init__ imports the trainer which imports this
+    # module, so a top-level import of repro.gbdt.early_exit would cycle
+    from repro.gbdt.early_exit import decision_final_mask
+
+    return decision_final_mask
 
 
 def _kernel(
@@ -183,3 +192,258 @@ def packed_predict(
         base_score.astype(jnp.float32),
     )
     return out[:n]
+
+
+def _kernel_ee(
+    x_ref,
+    words_ref,
+    lref_ref,
+    leaf_ref,
+    thr_ref,
+    off_ref,
+    feat_ref,
+    base_ref,
+    rem_ref,
+    slack_ref,
+    out_ref,
+    exit_ref,
+    *,
+    max_depth: int,
+    tidx_bits: int,
+    n_ensembles: int,
+    n_fu: int,
+    n_trees: int,
+    tree_block: int,
+    n_rows: int,
+    guard: float,
+):
+    """Early-exit variant of ``_kernel``: tile retirement between blocks.
+
+    ``exit_ref`` (TILE, 1) int32 is the cross-block carry: the stream
+    prefix at which each row became decision-final (sentinel ``T+1`` while
+    undecided).  A tile is skipped — mask-and-skip, no partial-row masking
+    — once *every* row has exited, so rows that never exit accumulate the
+    exact op sequence of the plain kernel (bit-identical scores), and
+    already-exited rows in a still-live tile keep accumulating, which is
+    harmless: decision-final means no suffix can change their label.
+    """
+    i = pl.program_id(0)
+    tb = pl.program_id(1)
+    C = n_ensembles
+    sentinel = n_trees + 1
+
+    x = x_ref[...]
+    words = words_ref[...]
+    lref = lref_ref[...]
+    leaf_values = leaf_ref[...]
+    thr_table = thr_ref[...]
+    thr_offsets = off_ref[...]
+    used_features = feat_ref[...]
+    base = base_ref[...]
+
+    I = words.shape[1]
+    tmask = jnp.uint32((1 << tidx_bits) - 1)
+
+    @pl.when(tb == 0)
+    def _init():
+        out_ref[...] = jnp.broadcast_to(base[None, :], (TILE, C))
+        ridx = i * TILE + jax.lax.broadcasted_iota(jnp.int32, (TILE, 1), 0)
+        # padding rows "exit" at 0 so they never hold a tile open
+        exit_ref[...] = jnp.where(ridx >= n_rows, 0, sentinel)
+
+    start = tb * tree_block
+    done = jnp.all(exit_ref[...] <= start)
+
+    @pl.when(jnp.logical_not(done))
+    def _block():
+        acc = jnp.zeros((TILE, C), jnp.float32)
+        for k in range(tree_block):
+            row = words[k]
+            idx = jnp.zeros((TILE,), jnp.int32)
+            for _ in range(max_depth):
+                word = row[idx]
+                ref = (word >> tidx_bits).astype(jnp.int32)
+                tix = (word & tmask).astype(jnp.int32)
+                split = ref < n_fu
+                safe = jnp.minimum(ref, max(n_fu - 1, 0))
+                fidx = used_features[safe]
+                xv = jnp.take_along_axis(x, fidx[:, None], axis=1)[:, 0]
+                thr = thr_table[thr_offsets[safe] + tix]
+                go_left = jnp.where(split, xv <= thr, True)
+                idx = 2 * idx + jnp.where(go_left, 1, 2)
+            v = leaf_values[lref[k, idx - I]]
+            live = (start + k < n_trees).astype(jnp.float32)
+            acc = acc.at[:, k % C].add(v * live)
+        out_ref[...] += acc
+
+        s = out_ref[...]
+        rem = rem_ref[...][0]        # (C,) bound after this block boundary
+        slack = slack_ref[...]       # (C,)
+        fin = _decision_final()(s, rem, slack, guard)      # (TILE,)
+        boundary = jnp.minimum(start + tree_block, n_trees)
+        cur = exit_ref[...]
+        newly = fin[:, None] & (cur == sentinel)
+        exit_ref[...] = jnp.where(newly, boundary, cur)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "max_depth", "tidx_bits", "n_ensembles", "n_rows", "guard",
+        "interpret",
+    ),
+)
+def _packed_predict_ee_call(
+    x,
+    words,
+    leaf_ref,
+    leaf_values,
+    thr_table,
+    thr_offsets,
+    used_features,
+    base_score,
+    rem_blocks,
+    slack,
+    *,
+    max_depth: int,
+    tidx_bits: int,
+    n_ensembles: int,
+    n_rows: int,
+    guard: float,
+    interpret: bool = True,
+):
+    n, d = x.shape
+    C = n_ensembles
+    T = words.shape[0]
+    n_pad = -n % TILE
+    if n_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+    n_tiles = (n + n_pad) // TILE
+    tree_block = -(-TREE_BLOCK // C) * C
+    t_pad = -T % tree_block
+    if t_pad:
+        words = jnp.pad(words, ((0, t_pad), (0, 0)))
+        leaf_ref = jnp.pad(leaf_ref, ((0, t_pad), (0, 0)))
+    n_tblocks = (T + t_pad) // tree_block
+    n_fu = used_features.shape[0]
+    if n_fu == 0:
+        used_features = jnp.zeros((1,), jnp.int32)
+        thr_table = jnp.zeros((1,), jnp.float32)
+
+    whole = lambda shape: pl.BlockSpec(shape, lambda i, t: (0,) * len(shape))
+    out, exit_tree = pl.pallas_call(
+        functools.partial(
+            _kernel_ee,
+            max_depth=max_depth,
+            tidx_bits=tidx_bits,
+            n_ensembles=n_ensembles,
+            n_fu=n_fu,
+            n_trees=T,
+            tree_block=tree_block,
+            n_rows=n_rows,
+            guard=guard,
+        ),
+        grid=(n_tiles, n_tblocks),
+        in_specs=[
+            pl.BlockSpec((TILE, d), lambda i, t: (i, 0)),
+            pl.BlockSpec((tree_block, words.shape[1]), lambda i, t: (t, 0)),
+            pl.BlockSpec((tree_block, leaf_ref.shape[1]), lambda i, t: (t, 0)),
+            whole(leaf_values.shape),
+            whole(thr_table.shape),
+            whole(thr_offsets.shape),
+            whole(used_features.shape),
+            whole(base_score.shape),
+            pl.BlockSpec((1, C), lambda i, t: (t, 0)),
+            whole(slack.shape),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE, C), lambda i, t: (i, 0)),
+            pl.BlockSpec((TILE, 1), lambda i, t: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + n_pad, C), jnp.float32),
+            jax.ShapeDtypeStruct((n + n_pad, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        x.astype(jnp.float32),
+        words.astype(jnp.uint32),
+        leaf_ref.astype(jnp.int32),
+        leaf_values.astype(jnp.float32),
+        thr_table.astype(jnp.float32),
+        thr_offsets.astype(jnp.int32),
+        used_features.astype(jnp.int32),
+        base_score.astype(jnp.float32),
+        rem_blocks.astype(jnp.float32),
+        slack.astype(jnp.float32),
+    )
+    return out[:n], exit_tree[:n, 0]
+
+
+def _round_up_f32(x64: np.ndarray) -> np.ndarray:
+    """float64 -> float32, rounding toward +inf (keeps bounds sound)."""
+    x32 = x64.astype(np.float32)
+    low = x32.astype(np.float64) < x64
+    return np.where(low, np.nextafter(x32, np.float32(np.inf)), x32)
+
+
+def packed_predict_early_exit(
+    x,
+    words,
+    leaf_ref,
+    leaf_values,
+    thr_table,
+    thr_offsets,
+    used_features,
+    base_score,
+    bound,
+    slack,
+    *,
+    max_depth: int,
+    tidx_bits: int,
+    n_ensembles: int,
+    guard: float = 0.0,
+    min_trees: int = 0,
+    interpret: bool = True,
+):
+    """Early-exit packed inference: (scores, trees_evaluated, exited).
+
+    ``bound`` is the (T+1, C) float64 ``remaining_mass`` table for the
+    packed tree order; ``slack`` the (C,) policy slack.  Both are rounded
+    *up* when narrowed to the kernel's float32, so narrowing can only make
+    exits later, never unsound.  Exit checks before ``min_trees`` are
+    disabled by forcing those bound rows to +inf.  ``trees_evaluated`` is
+    the per-row decision-final prefix (block-aligned); the kernel's actual
+    compute skips whole sample tiles once every row in the tile has
+    exited.
+    """
+    n = x.shape[0]
+    C = n_ensembles
+    T = words.shape[0]
+    if T == 0:
+        scores = jnp.broadcast_to(
+            base_score[None, :].astype(jnp.float32), (n, C))
+        return scores, np.zeros(n, np.int32), np.zeros(n, bool)
+
+    tree_block = -(-TREE_BLOCK // C) * C
+    n_tblocks = -(-T // tree_block)
+    bound64 = np.asarray(bound, np.float64)
+    if bound64.shape != (T + 1, C):
+        raise ValueError(f"bound table shape {bound64.shape} != {(T + 1, C)}")
+    boundaries = np.minimum((np.arange(n_tblocks) + 1) * tree_block, T)
+    rem_blocks = _round_up_f32(bound64[boundaries])
+    rem_blocks[boundaries < int(min_trees)] = np.inf
+    slack32 = _round_up_f32(np.asarray(slack, np.float64))
+
+    scores, exit_tree = _packed_predict_ee_call(
+        x, words, leaf_ref, leaf_values, thr_table, thr_offsets,
+        used_features, base_score, jnp.asarray(rem_blocks),
+        jnp.asarray(slack32),
+        max_depth=max_depth, tidx_bits=tidx_bits, n_ensembles=n_ensembles,
+        n_rows=n, guard=float(guard), interpret=interpret,
+    )
+    exit_tree = np.asarray(exit_tree)
+    # a decision at the final boundary saved nothing — not an exit (matches
+    # the reference evaluator, which stops checking at p == T)
+    exited = exit_tree < T
+    return scores, np.minimum(exit_tree, T).astype(np.int32), exited

@@ -18,6 +18,11 @@
     PYTHONPATH=src python -m repro.launch.fleet --models fleet_dir/ \
         --smoke --streaming
 
+    # Adaptive early exit: stop scoring a row once its label is provably
+    # final within the margin bound (exact-label parity, fewer trees/row):
+    PYTHONPATH=src python -m repro.launch.fleet --models fleet_dir/ \
+        --smoke --early-exit 0.0
+
 Also reachable through the serving CLI's arch dispatch::
 
     PYTHONPATH=src python -m repro.launch.serve --arch toad-fleet \
@@ -83,6 +88,11 @@ def serve_fleet(args) -> dict:
 
     policy = resolve_policy(args)
     streaming = bool(getattr(args, "streaming", False))
+    ee_policy = None
+    if getattr(args, "early_exit", None) is not None:
+        from repro.api import EarlyExitPolicy
+
+        ee_policy = EarlyExitPolicy(epsilon=args.early_exit)
     t0 = time.time()
     try:
         registry = ModelRegistry.from_dir(args.models, streaming=streaming)
@@ -114,6 +124,7 @@ def serve_fleet(args) -> dict:
         max_wait_ms=args.max_wait_ms,
         policy=policy,
         streaming=streaming,
+        early_exit=ee_policy,
     )
 
     ids = registry.ids()
@@ -134,6 +145,25 @@ def serve_fleet(args) -> dict:
                 f"{res.n_blocks} final={res.score_is_final} "
                 f"ttfp={st['time_to_first_prediction_ms']:.1f} ms"
             )
+        if ee_policy is not None:
+            # cold-start + early exit: a FRESH scorer over the same
+            # container stops pulling blocks once the partial sums are
+            # provably decision-final for the probe batch
+            from repro.stream.progressive import ProgressiveScorer
+            from repro.stream.reader import open_streaming
+
+            for mid in ids:
+                entry = registry.get(mid)
+                if not entry.is_streaming:
+                    continue
+                scorer = ProgressiveScorer(open_streaming(entry.path))
+                q = _probe_queries(entry.model, 4)
+                res = scorer.feed_until_confident(q, ee_policy)
+                print(
+                    f"  cold early-exit {mid}: trees_evaluated "
+                    f"{res.trees_evaluated}, blocks {res.blocks_evaluated}/"
+                    f"{res.n_blocks}, reason={res.exit_reason}"
+                )
         engine.wait_complete()
         print("all streaming entries complete; scores below are final")
     queries = {
@@ -141,6 +171,7 @@ def serve_fleet(args) -> dict:
         for mid in ids
     }
     errs: list[float] = []
+    mism: list[int] = []  # early-exit mode: label mismatches
     rng = np.random.default_rng(0)
     # each client interleaves model ids, so same-model requests from
     # different clients land in the same batches (cross-tenant batching)
@@ -165,7 +196,21 @@ def serve_fleet(args) -> dict:
             ref = registry.get(mid).model.predict(
                 queries[mid][i : i + 1], backend="reference"
             )[0]
-            errs.append(float(np.abs(got - ref).max()))
+            entry = registry.get(mid)
+            if ee_policy is not None and not entry.is_streaming:
+                # exited rows carry partial sums — the contract is exact
+                # labels, not score parity (streaming entries stay on full
+                # evaluation, so they keep the strict score check below)
+                from repro.gbdt.early_exit import predict_label_from_scores
+
+                task = entry.model.config.task
+                g = predict_label_from_scores(
+                    np.asarray(got, np.float64).reshape(1, -1), task)
+                r = predict_label_from_scores(
+                    np.asarray(ref, np.float64).reshape(1, -1), task)
+                mism.append(int(g[0] != r[0]))
+            else:
+                errs.append(float(np.abs(got - ref).max()))
 
     with engine:
         engine.warm(*ids)
@@ -190,12 +235,26 @@ def serve_fleet(args) -> dict:
             got = np.stack([f.result() for f in
                             [engine.submit(mid, x) for x in X]])
             ref = entry.model.predict(X, backend="reference")
-            err = float(np.abs(got - ref).max())
-            assert err <= 1e-5, f"post-swap parity {err:.2e} > 1e-5"
+            if ee_policy is not None and not entry.is_streaming:
+                from repro.gbdt.early_exit import predict_label_from_scores
+
+                task = entry.model.config.task
+                bad = int(np.sum(
+                    predict_label_from_scores(
+                        np.asarray(got, np.float64).reshape(len(X), -1), task)
+                    != predict_label_from_scores(
+                        np.asarray(ref, np.float64).reshape(len(X), -1), task)
+                ))
+                assert bad == 0, f"post-swap early-exit label parity: {bad}"
+                parity = f"{bad} label mismatch(es)"
+            else:
+                err = float(np.abs(got - ref).max())
+                assert err <= 1e-5, f"post-swap parity {err:.2e} > 1e-5"
+                parity = f"max|Δ| {err:.2e}"
             assert entry.version == before + 1
             swapped[mid] = entry.version
             print(f"hot-swapped {mid!r}: v{before} -> v{entry.version} "
-                  f"(post-swap parity {err:.2e})")
+                  f"(post-swap parity {parity})")
 
         # breaker/active views are per *hot* backend: capture before stop()
         # retires them all
@@ -203,15 +262,25 @@ def serve_fleet(args) -> dict:
 
     stats = engine.stats()
     n_served = stats.fleet.n_requests
+    n_checked = len(errs) + len(mism)
     max_err = max(errs) if errs else 0.0
     print(
-        f"served {len(errs)} routed requests across {len(ids)} models in "
-        f"{wall:.2f}s — {len(errs) / max(wall, 1e-9):.1f} req/s, "
+        f"served {n_checked} routed requests across {len(ids)} models in "
+        f"{wall:.2f}s — {n_checked / max(wall, 1e-9):.1f} req/s, "
         f"mean batch {stats.fleet.mean_batch:.1f}, "
         f"p95 {stats.fleet.latency_p95_ms:.2f} ms, "
         f"{stats.n_retired} retired backend(s)"
     )
-    print(f"parity vs per-model reference: max|Δ| = {max_err:.2e}")
+    if ee_policy is not None:
+        n_mism = sum(mism)
+        print(f"early-exit: trees_evaluated mean "
+              f"{stats.fleet.mean_trees_evaluated:.2f} per row over "
+              f"{stats.fleet.n_early_exit_rows} rows "
+              f"(exact-label mismatches = {n_mism}/{len(mism)})")
+        assert n_mism == 0, \
+            f"{n_mism} early-exited request(s) changed predict_label"
+    else:
+        print(f"parity vs per-model reference: max|Δ| = {max_err:.2e}")
     if policy is not None:
         print(f"resilience: shed={stats.n_shed} "
               f"deadline_expired={stats.n_deadline_expired} "
@@ -224,7 +293,7 @@ def serve_fleet(args) -> dict:
         f"({report['dedup_saved_bytes']:.0f} B deduped across models)"
     )
     assert max_err <= 1e-5
-    assert n_served >= len(errs)
+    assert n_served >= n_checked
     return {
         "stats": stats.as_dict(),
         "memory": report,
@@ -250,6 +319,12 @@ def add_fleet_args(ap: argparse.ArgumentParser) -> None:
                     help="progressive cold-start: serve .toadpack entries "
                          "from their first tree block while the rest stream "
                          "in (see docs/streaming.md)")
+    ap.add_argument("--early-exit", type=float, default=None,
+                    metavar="EPSILON",
+                    help="adaptive early exit: stop evaluating a row once "
+                         "its decision is provably final within EPSILON "
+                         "margin slack (see docs/early_exit.md); parity "
+                         "switches to exact-label equality")
 
 
 def main():

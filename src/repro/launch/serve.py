@@ -124,6 +124,11 @@ def serve_gbdt(args) -> dict:
     from repro.configs import get_gbdt_config
 
     policy = resolve_policy(args)
+    ee_policy = None
+    if getattr(args, "early_exit", None) is not None:
+        from repro.api import EarlyExitPolicy
+
+        ee_policy = EarlyExitPolicy(epsilon=args.early_exit)
 
     backend = args.backend or "packed"
     if backend != "auto":
@@ -184,10 +189,11 @@ def serve_gbdt(args) -> dict:
     engine = GBDTEngine(
         model, backend=None if backend == "auto" else backend,
         max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
-        policy=policy,
+        policy=policy, early_exit=ee_policy,
     )
     queries = X[rng.integers(0, X.shape[0], size=n_requests)]
     errs = []
+    mism = []  # early-exit mode: label mismatches per client
 
     def client(lo: int, hi: int):
         futs = [engine.submit(queries[i]) for i in range(lo, hi)]
@@ -204,7 +210,20 @@ def serve_gbdt(args) -> dict:
                     raise
         if idx:
             ref = model.predict(queries[idx], backend="reference")
-            errs.append(float(np.abs(np.stack(out) - ref).max()))
+            if ee_policy is not None:
+                # exited rows carry partial sums, so score parity is the
+                # wrong check — the early-exit contract is exact labels
+                from repro.gbdt.early_exit import predict_label_from_scores
+
+                task = model.config.task
+                got = np.stack(out).reshape(len(idx), -1).astype(np.float64)
+                ref2 = np.asarray(ref, np.float64).reshape(len(idx), -1)
+                mism.append(int(np.sum(
+                    predict_label_from_scores(got, task)
+                    != predict_label_from_scores(ref2, task)
+                )))
+            else:
+                errs.append(float(np.abs(np.stack(out) - ref).max()))
 
     with engine:
         threads = [
@@ -224,7 +243,15 @@ def serve_gbdt(args) -> dict:
     print(f"served {s.n_requests} requests in {wall:.2f}s — "
           f"{s.n_requests / wall:.1f} req/s, mean batch {s.mean_batch:.1f}, "
           f"p50 {s.latency_p50_ms:.2f} ms, p95 {s.latency_p95_ms:.2f} ms")
-    print(f"parity vs reference backend: max|Δ| = {max_err:.2e}")
+    if ee_policy is not None:
+        n_mism = sum(mism)
+        print(f"early-exit: trees_evaluated mean {s.mean_trees_evaluated:.2f}"
+              f" / {int(model.forest.n_trees)} trees "
+              f"(exact-label mismatches = {n_mism})")
+        assert n_mism == 0, \
+            f"{n_mism} early-exited request(s) changed predict_label"
+    else:
+        print(f"parity vs reference backend: max|Δ| = {max_err:.2e}")
     if policy is not None:
         print(f"resilience: shed={s.n_shed} "
               f"deadline_expired={s.n_deadline_expired} "
@@ -235,7 +262,8 @@ def serve_gbdt(args) -> dict:
         assert s.n_requests + s.n_shed + s.n_deadline_expired == n_requests
     else:
         assert s.n_requests == n_requests and s.n_requests / wall > 0
-    assert max_err <= 1e-5
+    if ee_policy is None:
+        assert max_err <= 1e-5
     return {**s.as_dict(), "req_per_s": s.n_requests / wall}
 
 

@@ -41,6 +41,17 @@ import json
 import numpy as np
 
 from repro.core.layout import encode, stream_offsets
+from repro.core.treeorder import remaining_mass, tree_order_most_informative
+
+__all__ = [
+    "PACK_MAGIC",
+    "PACK_FORMAT_VERSION",
+    "TREE_BLOCK",
+    "write_pack",
+    "read_manifest",
+    "is_pack",
+    "tree_order_most_informative",  # re-export: lives in repro.core.treeorder
+]
 
 PACK_MAGIC = b"TOADPACK"
 PACK_FORMAT_VERSION = 4
@@ -52,45 +63,6 @@ _PRELUDE_BYTES = 8 + 4 + 8
 
 def _sha256(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()
-
-
-def _reachable_leaf_mask(is_split: np.ndarray, depth: int) -> np.ndarray:
-    """(K, L) bool: which leaf slots a traversal can actually reach.
-
-    Unsplit nodes route left, so the right subtree of an unsplit (or dead)
-    node is unreachable — the same propagation the structural verifier uses
-    for TOAD010, extended one level down to the leaf row.
-    """
-    K, I = is_split.shape
-    L = I + 1
-    dead = np.zeros((K, I), bool)
-    for i in range(1, I):
-        p = (i - 1) // 2
-        dead[:, i] = dead[:, p] | ((i % 2 == 0) & ~is_split[:, p])
-    reach = np.ones((K, L), bool)
-    for j in range(L):
-        node = I + j
-        p = (node - 1) // 2
-        reach[:, j] = ~dead[:, p] & ((node % 2 == 1) | is_split[:, p])
-    return reach
-
-
-def tree_order_most_informative(forest) -> np.ndarray:
-    """Permutation of ``range(n_trees)``: descending reachable leaf mass.
-
-    Ties break on the original index (stable), so the order is
-    deterministic for a given forest.
-    """
-    K = int(forest.n_trees)
-    if K == 0:
-        return np.zeros(0, np.int64)
-    is_split = np.asarray(forest.is_split)[:K]
-    leaf_ref = np.asarray(forest.leaf_ref)[:K]
-    leaf_values = np.asarray(forest.leaf_values)
-    depth = int(np.log2(leaf_ref.shape[1]))
-    reach = _reachable_leaf_mask(is_split, depth)
-    mass = np.where(reach, np.abs(leaf_values[leaf_ref]), 0.0).sum(axis=1)
-    return np.argsort(-mass, kind="stable").astype(np.int64)
 
 
 def _permute_trees(forest, order: np.ndarray):
@@ -132,12 +104,18 @@ def write_pack(
     *,
     tree_block: int = TREE_BLOCK,
     tree_order: np.ndarray | None = None,
+    early_exit=None,
 ) -> str:
     """Write a fitted (compressed) model as a ``.toadpack`` v4 container.
 
     ``tree_order`` overrides the default most-informative-first permutation
     (any permutation of ``range(n_trees)`` is valid — the manifest records
-    it and the progressive scorer maps classes through it).  Returns the
+    it and the progressive scorer maps classes through it).  The manifest
+    always embeds the early-exit ``remaining_mass`` bound table for this
+    order (so ``ProgressiveScorer.feed_until_confident`` works on any
+    pack); ``early_exit`` optionally ships an
+    :class:`~repro.gbdt.early_exit.EarlyExitPolicy` alongside it
+    (default: the model's ``early_exit_policy``, if set).  Returns the
     path written.  ``repro.api.artifact.save_streaming`` is the public
     entry point and adds post-write verification.
     """
@@ -211,6 +189,15 @@ def write_pack(
 
     import dataclasses
 
+    policy = early_exit
+    if policy is None:
+        policy = getattr(model, "early_exit_policy", None)
+    early_exit_entry = {
+        "remaining_mass": [[float(v) for v in row]
+                           for row in remaining_mass(forest, order)],
+        "policy": policy.to_dict() if policy is not None else None,
+    }
+
     manifest = {
         "format": "toadpack",
         "format_version": PACK_FORMAT_VERSION,
@@ -227,6 +214,7 @@ def write_pack(
         "config": dataclasses.asdict(model.config),
         "n_bins": model.n_bins,
         "spec": model.spec.to_dict() if model.spec is not None else None,
+        "early_exit": early_exit_entry,
         "header": header_entry,
         "blocks": blocks,
         "fingerprint": fingerprint,

@@ -75,13 +75,26 @@ def _block_values_jnp(x, feature, thr_value, is_split, leaf_ref, leaf_values,
 
 @dataclasses.dataclass
 class ProgressiveResult:
-    """One progressive response: scores + how final they are."""
+    """One progressive response: scores + how final they are.
+
+    Two distinct kinds of "final": ``score_is_final`` means every block was
+    fed, so the *scores* equal the classic path numerically (block-count
+    semantics — pinned by a regression test, existing callers key retries
+    off it).  ``decision_is_final`` additionally covers decision-finality:
+    an early-exit policy proved the *labels* can no longer change even
+    though blocks remain.  ``exit_reason`` says which way the evaluation
+    stopped: ``"complete"`` (all blocks), ``"margin"`` (bound-based exit),
+    ``"max_trees"`` (policy cap — guarantee forfeited), or ``"partial"``
+    (neither — a plain mid-stream snapshot).
+    """
 
     scores: np.ndarray        # (n, C) float32 partial (or final) sums
     blocks_evaluated: int
     n_blocks: int
     trees_evaluated: int
     score_is_final: bool
+    exit_reason: str = "partial"
+    decision_is_final: bool = False
 
 
 class ProgressiveScorer:
@@ -186,16 +199,73 @@ class ProgressiveScorer:
             trees += block.n_trees
         if self._ttfp_ms is None and (blocks or self.n_blocks == 0):
             self._ttfp_ms = (time.perf_counter() - self._t0) * 1e3
+        final = len(blocks) >= self.n_blocks
         return ProgressiveResult(
             scores=scores.astype(np.float32),
             blocks_evaluated=len(blocks),
             n_blocks=self.n_blocks,
             trees_evaluated=trees,
-            score_is_final=len(blocks) >= self.n_blocks,
+            score_is_final=final,
+            exit_reason="complete" if final else "partial",
+            decision_is_final=final,
         )
 
     def predict_scores(self, X, backend: str | None = None) -> np.ndarray:
         return self.predict(X, backend=backend).scores
+
+    def feed_until_confident(self, X, policy,
+                             backend: str | None = None) -> ProgressiveResult:
+        """Feed blocks only until the partial sums are decision-final for X.
+
+        Uses the manifest's early-exit ``remaining_mass`` bound table (the
+        compress-time suffix bound for the pack's tree order): after each
+        block, if every row of ``X`` satisfies
+        :func:`repro.gbdt.early_exit.decision_final_mask`, stop pulling —
+        the labels provably equal the converged ones.  Respects the
+        policy's ``min_trees``/``max_trees`` and returns a
+        :class:`ProgressiveResult` whose ``exit_reason`` says why feeding
+        stopped.  Blocks already fed (e.g. by the background feeder) count
+        toward the prefix.
+        """
+        from repro.gbdt.early_exit import decision_final_mask
+
+        ee = self._sm.manifest.get("early_exit") or {}
+        table = ee.get("remaining_mass")
+        if table is None:
+            raise ValueError(
+                "this .toadpack has no early_exit bound table; re-export it "
+                "with repro.api.save_streaming (format writes the table "
+                "unconditionally since early-exit landed)"
+            )
+        bound = np.asarray(table, np.float64)
+        C = self._header.n_ensembles
+        K = int(self._sm.manifest["n_trees"])
+        if bound.shape != (K + 1, C):
+            raise ValueError(
+                f"early_exit bound table shape {bound.shape} != {(K + 1, C)}")
+        slack = policy.slack(C)
+        max_trees = K if policy.max_trees is None else min(
+            int(policy.max_trees), K)
+
+        while True:
+            res = self.predict(X, backend=backend)
+            if res.score_is_final:
+                return res  # exit_reason "complete" already set
+            k = res.trees_evaluated
+            if (not policy.never_exits and k >= policy.min_trees
+                    and k < K):
+                fin = decision_final_mask(
+                    res.scores.astype(np.float64), bound[k], slack,
+                    policy.guard)
+                if bool(np.all(fin)):
+                    return dataclasses.replace(
+                        res, exit_reason="margin", decision_is_final=True)
+            if k >= max_trees:
+                return dataclasses.replace(res, exit_reason="max_trees")
+            if not self.feed_next():
+                # another thread fed the tail between predict and here;
+                # next predict sees score_is_final
+                continue
 
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:
